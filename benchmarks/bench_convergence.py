@@ -1,0 +1,43 @@
+"""Figure 1 reproduction: xi versus RES and T for ITA on the four datasets.
+
+Paper claims (§VI.B):
+  (1) RES is linear in xi            (Formula 18: RES ≈ (1-λ)·xi)
+  (2) T grows as log(1/xi)           (Formula 14: T = O(log_λ xi))
+Checked by fitting log-log / semilog slopes over xi ∈ 1e-4 .. 1e-12.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ita_traced
+
+from .common import csv_row, load_datasets, timed
+
+
+def run(datasets=None) -> list[str]:
+    rows = []
+    datasets = datasets or load_datasets()
+    xis = [1e-4, 1e-6, 1e-8, 1e-10, 1e-12]
+    for name, g in datasets.items():
+        res_list, iter_list, wall_list = [], [], []
+        for xi in xis:
+            r, wall = timed(lambda: ita_traced(g, xi=xi))
+            res_list.append(max(r.residual, 1e-300))
+            iter_list.append(r.iterations)
+            wall_list.append(wall)
+        # slope of log10(RES) vs log10(xi) — paper predicts ~1 (linear)
+        slope_res = np.polyfit(np.log10(xis), np.log10(res_list), 1)[0]
+        # T vs log10(1/xi) — paper predicts linear growth
+        slope_T = np.polyfit(np.log10(1 / np.asarray(xis)), iter_list, 1)[0]
+        rows.append(csv_row(
+            f"fig1/{name}", wall_list[-1] * 1e6,
+            f"res_slope={slope_res:.2f} (paper: ~1) iters@1e-12={iter_list[-1]} "
+            f"dT/dlog10xi={slope_T:.1f}"))
+        for xi, res, it, w in zip(xis, res_list, iter_list, wall_list):
+            rows.append(csv_row(f"fig1/{name}/xi={xi:g}", w * 1e6,
+                                f"RES={res:.3e} T={it}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

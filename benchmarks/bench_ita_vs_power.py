@@ -1,0 +1,61 @@
+"""Figures 2-3 + Table 4 reproduction: ITA versus the power method.
+
+Table 4 of the paper: CPU time until ERR < 1e-3 for SPI (single-thread
+power), MPI (multi-thread power) and ITA; the paper reports ITA 1.5-4x
+faster than SPI.  On this container both power variants are the same XLA
+program (CPU thread count is runtime-controlled), so the comparison is
+power-vs-ITA wall time + the hardware-independent operation counts
+M(T) (Formula 15) — the quantity the paper's speedup is built on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import err_max_rel, ita_traced, power_method, power_method_traced, reference_pagerank
+
+from .common import csv_row, load_datasets, timed
+
+
+def time_to_err(g, target=1e-3):
+    """Walk down xi/tol until ERR(target) is reached; report wall+ops."""
+    pi_true = reference_pagerank(g)
+
+    # power method: iterate, tracking ERR each iteration
+    r_pow, wall_pow = timed(
+        lambda: power_method_traced(g, tol=1e-300, max_iter=200, pi_true=pi_true))
+    err_hist = r_pow.active_history  # ERR trace (see power_method_traced)
+    it_pow = next((i + 1 for i, e in enumerate(err_hist) if e < target),
+                  len(err_hist))
+    ops_pow = (2 * g.m + g.n) * it_pow
+    wall_pow_scaled = wall_pow * it_pow / max(r_pow.iterations, 1)
+
+    # ITA: run at successively tighter xi until ERR < target
+    for xi in (1e-4, 1e-5, 1e-6, 1e-7, 1e-8):
+        r_ita, wall_ita = timed(lambda: ita_traced(g, xi=xi))
+        err = float(err_max_rel(r_ita.pi, pi_true))
+        if err < target:
+            return dict(it_pow=it_pow, ops_pow=ops_pow, wall_pow=wall_pow_scaled,
+                        xi=xi, it_ita=r_ita.iterations, ops_ita=r_ita.ops,
+                        wall_ita=wall_ita, err_ita=err)
+    return dict(it_pow=it_pow, ops_pow=ops_pow, wall_pow=wall_pow_scaled,
+                xi=float("nan"), it_ita=-1, ops_ita=float("nan"),
+                wall_ita=float("nan"), err_ita=float("nan"))
+
+
+def run(datasets=None) -> list[str]:
+    rows = []
+    datasets = datasets or load_datasets()
+    for name, g in datasets.items():
+        d = time_to_err(g)
+        ops_ratio = d["ops_pow"] / d["ops_ita"] if d["ops_ita"] else float("nan")
+        wall_ratio = d["wall_pow"] / d["wall_ita"] if d["wall_ita"] else float("nan")
+        rows.append(csv_row(
+            f"table4/{name}", d["wall_ita"] * 1e6,
+            f"ops_power/ops_ita={ops_ratio:.2f} wall_power/wall_ita={wall_ratio:.2f} "
+            f"(paper: 1.5-4x) T_pow={d['it_pow']} T_ita={d['it_ita']} xi={d['xi']:g} "
+            f"err={d['err_ita']:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,50 @@
+"""Kernel-layer microbench: ELL layout quality + CPU-side op costs.
+
+Wall times here are CPU (interpret-mode Pallas is Python — orders slower
+by construction), so the *hardware-independent* numbers are the ones that
+matter: ELL fill ratio (padding overhead the TPU kernel pays), overflow
+fraction (COO fallback share), and bucket population.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.propagate import spmv_p
+from repro.graph import paper_dataset, web_graph
+from repro.sparse import ell_from_graph
+
+from .common import csv_row, timed
+
+
+def run(datasets=None) -> list[str]:
+    rows = []
+    for name, widths in (("w8-32-128", (8, 32, 128)),
+                         ("w4-8-32-128", (4, 8, 32, 128)),
+                         ("w16-64-256", (16, 64, 256))):
+        g = paper_dataset("web-Stanford", scale=0.05, seed=0)
+        ell = ell_from_graph(g, widths=widths)
+        st = ell.fill_stats()
+        rows.append(csv_row(
+            f"ell/{name}", 0.0,
+            f"fill={st['fill_ratio']:.2f} overflow={st['overflow_edges']/g.m:.3f} "
+            f"buckets={st['n_buckets']}"))
+    # segment-sum SpMV wall time (the COO baseline the kernel replaces)
+    g = web_graph(50_000, 400_000, dangling_frac=0.15, seed=5)
+    x = jnp.asarray(np.random.default_rng(0).random(g.n))
+    f = jax.jit(lambda x: spmv_p(g, x))
+    jax.block_until_ready(f(x))
+    import time
+    t0 = time.perf_counter()
+    for _ in range(20):
+        y = f(x)
+    jax.block_until_ready(y)
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    rows.append(csv_row("spmv/coo_segment_sum_50k_400k", us,
+                        f"bytes_touched~{(g.m*12 + g.n*16)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,47 @@
+"""Figure 5 reproduction: RES versus ERR — ITA converges more uniformly.
+
+Paper claim: at equal RES, ITA has smaller max-relative-error than the
+power method (because every vertex obeys the same per-vertex h<xi bound,
+rather than a global residual).  We sweep matched RES levels and report
+the ERR ratio power/ITA (>1 confirms the claim).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import err_max_rel, ita_traced, power_method_traced, reference_pagerank
+
+from .common import csv_row, load_datasets, timed
+
+
+def run(datasets=None) -> list[str]:
+    rows = []
+    datasets = datasets or load_datasets()
+    for name, g in datasets.items():
+        pi_true = reference_pagerank(g)
+        r_pow = power_method_traced(g, tol=1e-300, max_iter=200, pi_true=pi_true)
+        ratios = []
+        for xi in (1e-5, 1e-7, 1e-9):
+            r_ita = ita_traced(g, xi=xi, pi_true=pi_true)
+            if not r_ita.res_history:
+                continue
+            res_ita = r_ita.res_history[-1]
+            err_ita = r_ita.err_history[-1]  # type: ignore[attr-defined]
+            # find the power iteration with the closest RES
+            k = int(np.argmin(np.abs(np.log10(np.asarray(r_pow.res_history))
+                                     - np.log10(res_ita))))
+            err_pow = r_pow.active_history[k]
+            if err_ita > 0:
+                ratios.append(err_pow / err_ita)
+            rows.append(csv_row(
+                f"fig5/{name}/xi={xi:g}", 0.0,
+                f"RES={res_ita:.2e} ERR_ita={err_ita:.2e} ERR_pow@sameRES={err_pow:.2e}"))
+        if ratios:
+            rows.append(csv_row(
+                f"fig5/{name}", 0.0,
+                f"mean_ERRpow/ERRita={np.mean(ratios):.2f} (>1 = ITA more uniform)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

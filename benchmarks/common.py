@@ -1,0 +1,41 @@
+"""Shared benchmark utilities.
+
+CPU caveat (EXPERIMENTS.md §Repro): wall-clock numbers are JAX-on-CPU; the
+transferable quantities are iteration counts, operation counts (paper
+Formula 15) and convergence curves.  Graphs are stat-matched synthetic
+stand-ins for the paper's Table-3 datasets at ``SCALE`` of full size.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.graph import TABLE3_PRESETS, paper_dataset  # noqa: E402
+
+SCALE = 0.02
+DATASETS = list(TABLE3_PRESETS)
+
+
+def load_datasets(scale: float = SCALE):
+    out = {}
+    for name in DATASETS:
+        out[name] = paper_dataset(name, scale=scale, seed=0)
+    return out
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    best = float("inf")
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        jax.block_until_ready(getattr(result, "pi", result))
+        best = min(best, time.perf_counter() - t0)
+    return result, best
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig1 table4
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import sys
+
+from . import (
+    bench_convergence,
+    bench_dynamic,
+    bench_ita_vs_power,
+    bench_kernels,
+    bench_monte_carlo,
+    bench_operations,
+    bench_uniformity,
+)
+from .common import load_datasets
+
+SUITES = {
+    "fig1": bench_convergence.run,
+    "table4": bench_ita_vs_power.run,
+    "fig5": bench_uniformity.run,
+    "eq15": bench_operations.run,
+    "mc": bench_monte_carlo.run,
+    "kernels": bench_kernels.run,
+    "dynamic": bench_dynamic.run,
+}
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    names = argv or list(SUITES)
+    datasets = load_datasets()
+    print("name,us_per_call,derived")
+    for n in names:
+        if n not in SUITES:
+            print(f"unknown suite {n}; available: {sorted(SUITES)}", file=sys.stderr)
+            return 1
+        for row in SUITES[n](datasets):
+            print(row, flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Distributed ITA: the 1-D and 2-D edge partitions on a host-device mesh.
+
+Run with several fake devices to see the real shard_map collectives:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_pagerank.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import power_method  # noqa: E402
+from repro.core.distributed import ita_distributed_1d, ita_distributed_2d  # noqa: E402
+from repro.graph import paper_dataset  # noqa: E402
+
+
+def main():
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev}")
+    g = paper_dataset("web-Stanford", scale=0.02, seed=0)
+    print("graph:", g.stats())
+
+    pi_ref = power_method(g, tol=1e-13, max_iter=300).pi
+
+    mesh1 = jax.make_mesh((n_dev,), ("data",))
+    r1 = ita_distributed_1d(g, mesh1, xi=1e-12)
+    print(f"1-D: iters={r1.iterations} "
+          f"err={float(jnp.max(jnp.abs(r1.pi - pi_ref))):.2e}")
+
+    if n_dev >= 2:
+        rows = max(2, n_dev // 2)
+        mesh2 = jax.make_mesh((rows, n_dev // rows), ("data", "model"))
+        r2 = ita_distributed_2d(g, mesh2, xi=1e-12)
+        print(f"2-D ({rows}x{n_dev//rows}): iters={r2.iterations} "
+              f"err={float(jnp.max(jnp.abs(r2.pi - pi_ref))):.2e}")
+    print("collective schedule per step: psum_scatter(model) + all_gather(data)"
+          " — no all-to-all, no dangling-mass all-reduce (DESIGN.md §2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — a multi-pod JAX training/inference framework built around the
+Information Transmitting Algorithm (ITA) for parallel PageRank
+(Zhang, Yao, Liang, Zhang 2021), with a shared sparse-propagation substrate
+serving GNN, recsys and LM architecture families.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,50 @@
+"""Config registry — import this package and call get_config/get_arch.
+
+``--arch <id>`` anywhere in the launchers resolves through here.
+"""
+from .registry import (
+    ARCH_REGISTRY,
+    ArchSpec,
+    GNN_CELLS,
+    LM_CELLS,
+    RECSYS_CELLS,
+    ShapeCell,
+    all_cells,
+    get_arch,
+)
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (  # noqa: F401
+        gin_tu,
+        granite_34b,
+        granite_moe_3b_a800m,
+        graphcast,
+        meshgraphnet,
+        minitron_8b,
+        olmoe_1b_7b,
+        pagerank,
+        qwen15_05b,
+        schnet,
+        xdeepfm,
+    )
+    _LOADED = True
+
+
+def get_config(name: str, smoke: bool = False):
+    spec = get_arch(name)
+    return spec.make_smoke_config() if smoke else spec.make_config()
+
+
+def list_archs() -> list[str]:
+    _load_all()
+    return sorted(ARCH_REGISTRY)
+
+
+__all__ = ["ARCH_REGISTRY", "ArchSpec", "GNN_CELLS", "LM_CELLS", "RECSYS_CELLS",
+           "ShapeCell", "all_cells", "get_arch", "get_config", "list_archs"]

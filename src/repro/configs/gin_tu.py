@@ -1,0 +1,22 @@
+"""gin-tu [gnn]: 5 layers, d_hidden=64, sum aggregator, learnable eps
+[arXiv:1810.00826]."""
+from ..models.gnn.gin import GINConfig
+from .registry import ArchSpec, GNN_CELLS, register_arch
+
+
+def make_config() -> GINConfig:
+    return GINConfig(n_layers=5, d_hidden=64, aggregator="sum", learnable_eps=True)
+
+
+def make_smoke_config() -> GINConfig:
+    return GINConfig(n_layers=2, d_hidden=16)
+
+
+register_arch(ArchSpec(
+    name="gin-tu",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=GNN_CELLS,
+    notes="lightest assigned arch — scatter-bound everywhere; BN→LN adaptation",
+))

@@ -1,0 +1,24 @@
+"""graphcast [gnn]: 16 layers, d_hidden=512, mesh_refinement=6, sum agg,
+n_vars=227 — encoder-processor-decoder mesh GNN [arXiv:2212.12794]."""
+from ..models.gnn.graphcast import GraphCastConfig
+from .registry import ArchSpec, GNN_CELLS, register_arch
+
+
+def make_config() -> GraphCastConfig:
+    return GraphCastConfig(n_layers=16, d_hidden=512, mesh_refinement=6,
+                           n_vars=227, aggregator="sum")
+
+
+def make_smoke_config() -> GraphCastConfig:
+    return GraphCastConfig(n_layers=2, d_hidden=32, mesh_refinement=1, n_vars=16)
+
+
+register_arch(ArchSpec(
+    name="graphcast",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=GNN_CELLS,
+    notes="widest assigned GNN (d=512, 16L): the ogb_products cell is the "
+          "framework's heaviest sparse workload",
+))

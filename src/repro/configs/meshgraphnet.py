@@ -1,0 +1,24 @@
+"""meshgraphnet [gnn]: 15 layers, d_hidden=128, sum aggregator, 2-layer MLPs
+[arXiv:2010.03409]."""
+import dataclasses
+
+from ..models.gnn.meshgraphnet import MGNConfig
+from .registry import ArchSpec, GNN_CELLS, register_arch
+
+
+def make_config() -> MGNConfig:
+    return MGNConfig(n_layers=15, d_hidden=128, mlp_layers=2, aggregator="sum")
+
+
+def make_smoke_config() -> MGNConfig:
+    return MGNConfig(n_layers=2, d_hidden=32, mlp_layers=2)
+
+
+register_arch(ArchSpec(
+    name="meshgraphnet",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=GNN_CELLS,
+    notes="edge-featured interaction network; edge state doubles the scatter volume",
+))

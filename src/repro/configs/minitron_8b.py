@@ -1,0 +1,47 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron [arXiv:2407.14679; hf].
+
+Nemotron lineage: squared-ReLU non-gated FFN, untied embeddings (the 256k
+vocab embeddings are ~2.1B params of the total ~8B).
+"""
+import jax.numpy as jnp
+
+from ..models.lm import LMConfig
+from .registry import ArchSpec, LM_CELLS, register_arch
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="minitron-8b",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=16_384,
+        vocab=256_000,
+        ffn_type="relu2",
+        qkv_bias=False,
+        tie_embeddings=False,
+        dtype=jnp.bfloat16,
+        q_chunk=512,
+        max_seq=32_768,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="minitron-8b-smoke",
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_ff=512,
+        vocab=1024, ffn_type="relu2", tie_embeddings=False,
+        dtype=jnp.float32, q_chunk=64, max_seq=128,
+    )
+
+
+register_arch(ArchSpec(
+    name="minitron-8b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=LM_CELLS,
+    notes="256k vocab: the LM head matmul + vocab-parallel CE dominate short-seq cells",
+))

@@ -1,0 +1,46 @@
+"""olmoe-1b-7b [moe]: 16L d_model=2048 16H (GQA kv=16 == MHA) d_ff=1024/expert
+vocab=50304, MoE 64 experts top-8 [arXiv:2409.02060; hf].
+"""
+import jax.numpy as jnp
+
+from ..models.lm import LMConfig
+from ..models.moe import MoEConfig
+from .registry import ArchSpec, LM_CELLS, register_arch
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="olmoe-1b-7b",
+        n_layers=16,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1024,            # per expert
+        vocab=50_304,
+        ffn_type="swiglu",
+        tie_embeddings=False,  # OLMoE unties
+        moe=MoEConfig(n_experts=64, top_k=8, capacity_factor=2.0),
+        dtype=jnp.bfloat16,
+        q_chunk=512,
+        max_seq=32_768,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="olmoe-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=64,
+        vocab=512, ffn_type="swiglu", tie_embeddings=False,
+        moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=2.0),
+        dtype=jnp.float32, q_chunk=32, max_seq=128,
+    )
+
+
+register_arch(ArchSpec(
+    name="olmoe-1b-7b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=LM_CELLS,
+    notes="64 experts top-8: highest all-to-all volume of the assigned LMs",
+))

@@ -1,0 +1,41 @@
+"""The paper's own workload: ITA PageRank on the four Table-3 web graphs.
+
+Not one of the 10 assigned pool architectures — this is the paper-native
+config exercised by the reproduction benchmarks and the distributed-ITA
+dry-run (EXPERIMENTS.md §Repro and §Perf/pagerank).
+"""
+import dataclasses
+
+from ..graph.generators import TABLE3_PRESETS
+from .registry import ArchSpec, ShapeCell, register_arch
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRankConfig:
+    c: float = 0.85
+    xi: float = 1e-10
+    dataset: str = "web-Google"
+    scale: float = 1.0
+
+
+def make_config() -> PageRankConfig:
+    return PageRankConfig()
+
+
+def make_smoke_config() -> PageRankConfig:
+    return PageRankConfig(scale=0.01, xi=1e-8)
+
+
+PAGERANK_CELLS = tuple(
+    ShapeCell(name, "pagerank", dict(**preset, dataset=name))
+    for name, preset in TABLE3_PRESETS.items()
+)
+
+register_arch(ArchSpec(
+    name="pagerank",
+    family="pagerank",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=PAGERANK_CELLS,
+    notes="the paper's own technique; distributed via 1-D/2-D edge partition",
+))

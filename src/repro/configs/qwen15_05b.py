@@ -1,0 +1,44 @@
+"""qwen1.5-0.5b [dense]: 24L d_model=1024 16H (GQA kv=16 == MHA) d_ff=2816
+vocab=151936, QKV bias [hf:Qwen/Qwen1.5-0.5B; hf].
+"""
+import jax.numpy as jnp
+
+from ..models.lm import LMConfig
+from .registry import ArchSpec, LM_CELLS, register_arch
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="qwen1.5-0.5b",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,        # full MHA
+        d_ff=2816,
+        vocab=151_936,
+        ffn_type="swiglu",
+        qkv_bias=True,        # Qwen1.5 signature
+        tie_embeddings=True,
+        dtype=jnp.bfloat16,
+        q_chunk=512,
+        max_seq=32_768,
+    )
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="qwen1.5-0.5b-smoke",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=352,
+        vocab=1024, ffn_type="swiglu", qkv_bias=True,
+        dtype=jnp.float32, q_chunk=64, max_seq=128,
+    )
+
+
+register_arch(ArchSpec(
+    name="qwen1.5-0.5b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=LM_CELLS,
+    notes="tiny dense model with a 152k vocab: embedding-dominated (~31% of params)",
+))

@@ -1,0 +1,91 @@
+"""Architecture/shape registry — the single source of truth consumed by
+smoke tests, the dry-run, the roofline report and the launchers.
+
+Every assigned (architecture × input-shape) cell is declared here with the
+exact pool numbers.  ``skip`` documents pool-rule exclusions (long_500k on
+pure full-attention archs) — skipped cells still appear in the tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+__all__ = ["ShapeCell", "ArchSpec", "ARCH_REGISTRY", "register_arch",
+           "get_arch", "all_cells", "LM_CELLS", "GNN_CELLS", "RECSYS_CELLS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode | serve | retrieval
+    meta: dict
+    skip: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                        # lm | gnn | recsys
+    make_config: Callable[[], Any]     # full assigned config
+    make_smoke_config: Callable[[], Any]
+    cells: tuple
+    notes: str = ""
+
+
+ARCH_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register_arch(spec: ArchSpec) -> ArchSpec:
+    ARCH_REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in ARCH_REGISTRY:
+        from . import _load_all  # lazy import of all config modules
+        _load_all()
+    return ARCH_REGISTRY[name]
+
+
+def all_cells():
+    """Yield (arch_spec, cell) over the whole assignment (40 cells)."""
+    from . import _load_all
+    _load_all()
+    for spec in ARCH_REGISTRY.values():
+        for cell in spec.cells:
+            yield spec, cell
+
+
+# ---------------------------------------------------------------------------
+# Shape-cell sets (pool definitions, verbatim)
+# ---------------------------------------------------------------------------
+_FULL_ATTN_SKIP = ("needs sub-quadratic attention; arch is pure full-attention "
+                   "(pool rule: skip, noted in DESIGN.md)")
+
+LM_CELLS: tuple = (
+    ShapeCell("train_4k", "train", dict(seq_len=4096, global_batch=256)),
+    ShapeCell("prefill_32k", "prefill", dict(seq_len=32_768, global_batch=32)),
+    ShapeCell("decode_32k", "decode", dict(seq_len=32_768, global_batch=128)),
+    ShapeCell("long_500k", "decode", dict(seq_len=524_288, global_batch=1),
+              skip=_FULL_ATTN_SKIP),
+)
+
+GNN_CELLS: tuple = (
+    ShapeCell("full_graph_sm", "train",
+              dict(n_nodes=2_708, n_edges=10_556, d_feat=1_433, n_classes=7)),
+    ShapeCell("minibatch_lg", "train",
+              dict(n_nodes=232_965, n_edges=114_615_892, batch_nodes=1_024,
+                   fanout=(15, 10), d_feat=602, n_classes=41)),
+    ShapeCell("ogb_products", "train",
+              dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                   n_classes=47)),
+    ShapeCell("molecule", "train",
+              dict(n_nodes=30, n_edges=64, batch=128, d_feat=32)),
+)
+
+RECSYS_CELLS: tuple = (
+    ShapeCell("train_batch", "train", dict(batch=65_536)),
+    ShapeCell("serve_p99", "serve", dict(batch=512)),
+    ShapeCell("serve_bulk", "serve", dict(batch=262_144)),
+    ShapeCell("retrieval_cand", "retrieval", dict(batch=1, n_candidates=1_000_000)),
+)

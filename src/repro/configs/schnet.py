@@ -1,0 +1,22 @@
+"""schnet [gnn]: 3 interactions, d_hidden=64, rbf=300, cutoff=10
+[arXiv:1706.08566]."""
+from ..models.gnn.schnet import SchNetConfig
+from .registry import ArchSpec, GNN_CELLS, register_arch
+
+
+def make_config() -> SchNetConfig:
+    return SchNetConfig(n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0)
+
+
+def make_smoke_config() -> SchNetConfig:
+    return SchNetConfig(n_interactions=2, d_hidden=16, n_rbf=16, cutoff=10.0)
+
+
+register_arch(ArchSpec(
+    name="schnet",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=GNN_CELLS,
+    notes="continuous-filter conv: 300-wide RBF per edge makes edges feature-heavy",
+))

@@ -1,0 +1,34 @@
+"""xdeepfm [recsys]: 39 sparse fields, embed_dim=10, CIN 200-200-200,
+MLP 400-400 [arXiv:1803.05170]."""
+from ..models.recsys.xdeepfm import CRITEO_VOCABS, XDeepFMConfig
+from .registry import ArchSpec, RECSYS_CELLS, register_arch
+
+
+def make_config() -> XDeepFMConfig:
+    return XDeepFMConfig(
+        vocab_sizes=CRITEO_VOCABS,
+        embed_dim=10,
+        cin_layers=(200, 200, 200),
+        mlp_dims=(400, 400),
+        n_user_fields=20,
+    )
+
+
+def make_smoke_config() -> XDeepFMConfig:
+    return XDeepFMConfig(
+        vocab_sizes=tuple([32] * 13 + [100] * 26),
+        embed_dim=8,
+        cin_layers=(16, 16),
+        mlp_dims=(32, 32),
+        n_user_fields=20,
+    )
+
+
+register_arch(ArchSpec(
+    name="xdeepfm",
+    family="recsys",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    cells=RECSYS_CELLS,
+    notes="~34M-row embedding table row-sharded over the model axis; CIN is dense",
+))

@@ -1,0 +1,16 @@
+"""The paper's contribution: ITA and its baselines, as composable JAX modules."""
+from .api import SOLVERS, reference_pagerank, solve_pagerank
+from .dynamic import ita_incremental, ita_prioritized, ita_residual_state
+from .forward_push import forward_push
+from .ita import ita, ita_fixed_point, ita_step, ita_traced
+from .metrics import SolverResult, err_max_rel, res_l2
+from .monte_carlo import monte_carlo
+from .power import power_method, power_method_traced, power_step
+from .propagate import dangling_mass, push_weighted, spmv_p
+
+__all__ = [
+    "SOLVERS", "SolverResult", "dangling_mass", "err_max_rel", "forward_push",
+    "ita", "ita_fixed_point", "ita_step", "ita_traced", "monte_carlo",
+    "power_method", "power_method_traced", "power_step", "push_weighted",
+    "reference_pagerank", "res_l2", "solve_pagerank", "spmv_p",
+]

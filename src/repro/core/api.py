@@ -1,0 +1,43 @@
+"""Unified PageRank solver API.
+
+``solve_pagerank(graph, method=...)`` is the public entry point used by the
+examples, benchmarks and the launcher.  Every solver implements PR(P, c, p)
+per the paper's abbreviation and returns a :class:`SolverResult`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from ..graph.structure import Graph
+from .forward_push import forward_push
+from .ita import ita, ita_traced
+from .metrics import SolverResult
+from .monte_carlo import monte_carlo
+from .power import power_method, power_method_traced
+
+__all__ = ["solve_pagerank", "SOLVERS", "reference_pagerank"]
+
+SOLVERS: dict[str, Callable[..., SolverResult]] = {
+    "ita": ita,
+    "power": power_method,
+    "forward_push": forward_push,
+    "monte_carlo": monte_carlo,
+    "ita_traced": ita_traced,
+    "power_traced": power_method_traced,
+}
+
+
+def solve_pagerank(g: Graph, method: str = "ita", **kwargs) -> SolverResult:
+    if method not in SOLVERS:
+        raise KeyError(f"unknown solver {method!r}; available: {sorted(SOLVERS)}")
+    return SOLVERS[method](g, **kwargs)
+
+
+def reference_pagerank(g: Graph, *, c: float = 0.85,
+                       p: Optional[jnp.ndarray] = None,
+                       dtype=jnp.float64) -> jnp.ndarray:
+    """High-accuracy reference pi (the paper's "true value" is the 210th
+    power iteration; we iterate to machine-precision residual instead)."""
+    return power_method(g, c=c, p=p, tol=1e-14, max_iter=500, dtype=dtype).pi

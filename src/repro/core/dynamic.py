@@ -1,0 +1,180 @@
+"""Beyond-paper: ITA on dynamic graphs + prioritized push.
+
+The paper's §VII closes with "Having obtained the most fine-grained
+decomposition of PageRank, we can continue discussing PageRank on dynamic
+graph."  The constructive definition makes that step small, and we take it:
+
+**Incremental ITA** (``ita_incremental``).  At convergence the unnormalized
+information vector satisfies  ū = p + cP ū  (up to ξ).  After the graph
+changes P → P', the *residual of the old solution under the new graph*
+
+    r' = p + cP'ū − ū = c (P' − P) ū   (+ the old sub-ξ leftovers)
+
+is supported only on destinations of edges whose SOURCE changed out-degree
+or gained/lost edges — a tiny set for incremental updates.  By linearity
+of the Neumann series,  ū' = ū + (I − cP')⁻¹ r',  so we simply run ITA
+with h initialized from the run invariant (h₀ = p + cP'π̄_old − π̄_old —
+exact across dangling-status changes; the naive cancelled form c(P'−P)ū
+is first-order wrong when a dangling vertex gains an edge) and π̄
+initialized to ū.  Deletions make h negative — the signed push is still
+exact (the series is linear), with the active threshold on |h|.  The
+saving is the global warm-up phase: on small-world graphs the correction
+cascade still reaches most vertices, so expect ~1.5x fewer ops at ~0.25%
+edge churn and more as edits shrink (measured in tests).
+
+**Prioritized (Gauss-Southwell) ITA** (``ita_prioritized``).  The paper
+proves pushes commute, so ANY order converges to the same π — their
+threads use arrival order; Forward-Push literature uses max-residual
+(Gauss-Southwell) order.  We push only the top-K |h| vertices per round:
+fewer total operations on skewed graphs at the cost of more rounds — the
+knob trades bandwidth against latency on a real mesh.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.structure import Graph
+from .metrics import SolverResult
+
+__all__ = ["ita_residual_state", "ita_incremental", "ita_prioritized"]
+
+
+def _signed_ita_loop(g: Graph, h0, pi_bar0, c, xi, max_iter):
+    inv_deg = g.inv_out_deg(h0.dtype)
+    non_dangling = jnp.logical_not(g.dangling_mask)
+
+    def cond(state):
+        _, _, n_active, _, it = state
+        return jnp.logical_and(n_active > 0, it < max_iter)
+
+    def body(state):
+        h, pi_bar, _, ops_total, it = state
+        active = jnp.logical_and(jnp.abs(h) > xi, non_dangling)
+        h_act = jnp.where(active, h, 0)
+        pi_bar = pi_bar + h_act
+        contrib = (h_act * inv_deg)[g.src] * c
+        pushed = jax.ops.segment_sum(contrib, g.dst, num_segments=g.n)
+        h = jnp.where(active, 0, h) + pushed
+        n_active = jnp.sum(active, dtype=jnp.int32)
+        ops = jnp.sum(jnp.where(active, g.out_deg, 0).astype(jnp.float32),
+                      dtype=jnp.float32)
+        return h, pi_bar, n_active, ops_total + ops, it + 1
+
+    init = (h0, pi_bar0, jnp.asarray(1, jnp.int32),
+            jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+_signed_ita_loop_jit = jax.jit(_signed_ita_loop, static_argnames=("max_iter",))
+
+
+def ita_residual_state(g: Graph, *, c: float = 0.85, xi: float = 1e-12,
+                       dtype=jnp.float64):
+    """Solve from scratch, returning (pi_bar_unnormalized, h_leftover).
+
+    This is the warm-start state ``ita_incremental`` consumes.
+    """
+    h0 = jnp.ones((g.n,), dtype)
+    pi0 = jnp.zeros((g.n,), dtype)
+    h, pi_bar, n_active, ops, it = _signed_ita_loop_jit(
+        g, h0, pi0, float(c), float(xi), 100_000)
+    return pi_bar, h, float(ops), int(it)
+
+
+def ita_incremental(
+    g_old: Graph,
+    g_new: Graph,
+    pi_bar_old: jnp.ndarray,
+    h_old: jnp.ndarray,
+    *,
+    c: float = 0.85,
+    xi: float = 1e-12,
+    max_iter: int = 100_000,
+) -> SolverResult:
+    """Update PageRank after edge insertions/deletions.
+
+    r' = c·(P' − P)·ū + h_old, supported on dst(changed edges); runs the
+    signed ITA from (π̄=ū_old, h=r') on the NEW graph.
+    """
+    dtype = pi_bar_old.dtype
+    t0 = time.perf_counter()
+
+    def push(g: Graph, x):
+        contrib = (x * g.inv_out_deg(dtype))[g.src] * c
+        return jax.ops.segment_sum(contrib, g.dst, num_segments=g.n)
+
+    # Exact warm-start from the run invariant  π̄ + h = p + cP π̄  (which the
+    # converged old state satisfies to ξ): under the NEW graph the required
+    # in-flight vector is  h₀ = p + cP'π̄_old − π̄_old.  This form is exact
+    # across dangling-status changes — the cancelled form c(P'−P)(π̄+h)+h is
+    # NOT: a previously-dangling vertex gaining an edge carries O(1) parked
+    # mass in h, and (P'−P) hits it at first order (caught by tests).
+    p_vec = jnp.ones((g_new.n,), dtype)  # paper scale: h₀ = n·(e/n) = 1
+    r = p_vec + push(g_new, pi_bar_old) - pi_bar_old
+
+    h, pi_bar, n_active, ops, it = _signed_ita_loop_jit(
+        g_new, r, pi_bar_old, float(c), float(xi), max_iter)
+    pi_bar = pi_bar + h
+    pi = pi_bar / jnp.sum(pi_bar)
+    pi = jax.block_until_ready(pi)
+    return SolverResult(
+        pi=pi, iterations=int(it), residual=float(xi), ops=float(ops),
+        converged=bool(int(n_active) == 0), method="ita_incremental",
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+@partial(jax.jit, static_argnames=("max_iter", "k"))
+def _prioritized_loop(g: Graph, h0, c, xi, k: int, max_iter: int):
+    inv_deg = g.inv_out_deg(h0.dtype)
+    non_dangling = jnp.logical_not(g.dangling_mask)
+
+    def cond(state):
+        _, _, n_active, _, it = state
+        return jnp.logical_and(n_active > 0, it < max_iter)
+
+    def body(state):
+        h, pi_bar, _, ops_total, it = state
+        eligible = jnp.logical_and(h > xi, non_dangling)
+        # Gauss-Southwell: push only the top-k residuals this round
+        hv = jnp.where(eligible, h, -jnp.inf)
+        kth = jax.lax.top_k(hv, k)[0][-1]
+        active = jnp.logical_and(eligible, h >= jnp.maximum(kth, xi))
+        h_act = jnp.where(active, h, 0)
+        pi_bar = pi_bar + h_act
+        contrib = (h_act * inv_deg)[g.src] * c
+        pushed = jax.ops.segment_sum(contrib, g.dst, num_segments=g.n)
+        h = jnp.where(active, 0, h) + pushed
+        n_elig = jnp.sum(eligible, dtype=jnp.int32)
+        ops = jnp.sum(jnp.where(active, g.out_deg, 0).astype(jnp.float32),
+                      dtype=jnp.float32)
+        return h, pi_bar, n_elig, ops_total + ops, it + 1
+
+    init = (h0, jnp.zeros_like(h0), jnp.asarray(1, jnp.int32),
+            jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+def ita_prioritized(g: Graph, *, c: float = 0.85, xi: float = 1e-10,
+                    k: Optional[int] = None, max_iter: int = 1_000_000,
+                    dtype=jnp.float64) -> SolverResult:
+    """Top-K max-residual push (order freedom the paper's §IV proves)."""
+    k = k or max(g.n // 16, 1)
+    t0 = time.perf_counter()
+    h0 = jnp.ones((g.n,), dtype)
+    h, pi_bar, n_active, ops, it = _prioritized_loop(
+        g, h0, float(c), float(xi), int(k), int(max_iter))
+    pi_bar = pi_bar + h
+    pi = pi_bar / jnp.sum(pi_bar)
+    pi = jax.block_until_ready(pi)
+    return SolverResult(
+        pi=pi, iterations=int(it), residual=float(xi), ops=float(ops),
+        converged=bool(int(n_active) == 0), method="ita_prioritized",
+        wall_time_s=time.perf_counter() - t0,
+    )

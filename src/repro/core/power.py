@@ -1,0 +1,138 @@
+"""Power method — the paper's primary baseline (SPI / MPI in §VI).
+
+Solves  pi = P'' pi  with  P'' = c(P + p d^T) + (1-c) p e^T  by iterating
+
+    pi(k+1) = c P pi(k) + c (d . pi(k)) p + (1-c) p
+
+i.e. the dangling correction is the usual rank-1 update (Ipsen & Selee),
+never materialising P' or P''.  Per-iteration cost is (2m + n) operations
+(paper §V.D) plus — crucially for the distributed comparison — one *global
+reduction* for the dangling mass, which ITA does not need.
+
+Two entry points:
+  * ``power_method``       — jitted ``lax.while_loop`` fast path.
+  * ``power_method_traced``— python loop capturing per-iteration RES/ERR
+                             histories for the Fig. 1-3 reproductions.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.structure import Graph
+from .metrics import SolverResult, res_l2
+from .propagate import dangling_mass, spmv_p
+
+__all__ = ["power_method", "power_method_traced", "power_step"]
+
+
+def power_step(g: Graph, pi: jnp.ndarray, p: jnp.ndarray, c: float,
+               inv_deg: jnp.ndarray) -> jnp.ndarray:
+    """One P'' application.  Shared by both entry points and the tests."""
+    y = c * spmv_p(g, pi, inv_deg=inv_deg)
+    dm = dangling_mass(g, pi)
+    return y + (c * dm + (1.0 - c)) * p
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def _power_loop(g: Graph, p: jnp.ndarray, c: float, tol: float, max_iter: int):
+    inv_deg = g.inv_out_deg(p.dtype)
+
+    def cond(state):
+        _, res, it = state
+        return jnp.logical_and(res > tol, it < max_iter)
+
+    def body(state):
+        pi, _, it = state
+        pi_new = power_step(g, pi, p, c, inv_deg)
+        return pi_new, res_l2(pi_new, pi), it + 1
+
+    pi0 = p
+    init = (pi0, jnp.asarray(jnp.inf, p.dtype), jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+def _default_p(g: Graph, dtype) -> jnp.ndarray:
+    return jnp.full((g.n,), 1.0 / g.n, dtype=dtype)
+
+
+def power_method(
+    g: Graph,
+    *,
+    c: float = 0.85,
+    p: Optional[jnp.ndarray] = None,
+    tol: float = 1e-10,
+    max_iter: int = 1000,
+    dtype=jnp.float64,
+) -> SolverResult:
+    if p is None:
+        p = _default_p(g, dtype)
+    p = p.astype(dtype)
+    t0 = time.perf_counter()
+    pi, res, it = _power_loop(g, p, float(c), float(tol), int(max_iter))
+    pi = jax.block_until_ready(pi)
+    wall = time.perf_counter() - t0
+    it = int(it)
+    return SolverResult(
+        pi=pi,
+        iterations=it,
+        residual=float(res),
+        ops=float((2 * g.m + g.n) * it),
+        converged=bool(res <= tol),
+        method="power",
+        wall_time_s=wall,
+    )
+
+
+def power_method_traced(
+    g: Graph,
+    *,
+    c: float = 0.85,
+    p: Optional[jnp.ndarray] = None,
+    tol: float = 1e-10,
+    max_iter: int = 1000,
+    dtype=jnp.float64,
+    pi_true: Optional[jnp.ndarray] = None,
+) -> SolverResult:
+    """Instrumented python loop: returns per-iteration residual history
+    (and ERR history when ``pi_true`` is given) for the benchmark figures."""
+    from .metrics import err_max_rel
+
+    if p is None:
+        p = _default_p(g, dtype)
+    p = p.astype(dtype)
+    inv_deg = g.inv_out_deg(dtype)
+    step = jax.jit(lambda pi: power_step(g, pi, p, c, inv_deg))
+
+    pi = p
+    res_hist, err_hist = [], []
+    t0 = time.perf_counter()
+    it = 0
+    res = float("inf")
+    while res > tol and it < max_iter:
+        pi_new = step(pi)
+        res = float(res_l2(pi_new, pi))
+        res_hist.append(res)
+        if pi_true is not None:
+            err_hist.append(float(err_max_rel(pi_new, pi_true)))
+        pi = pi_new
+        it += 1
+    jax.block_until_ready(pi)
+    wall = time.perf_counter() - t0
+    out = SolverResult(
+        pi=pi,
+        iterations=it,
+        residual=res,
+        ops=float((2 * g.m + g.n) * it),
+        converged=res <= tol,
+        method="power",
+        res_history=res_hist,
+        wall_time_s=wall,
+    )
+    if pi_true is not None:
+        out.active_history = err_hist  # reused field: ERR trace
+    return out

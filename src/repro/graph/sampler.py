@@ -1,0 +1,94 @@
+"""Layer-wise neighbour sampler (GraphSAGE fanout sampling) — host-side.
+
+Produces STATIC-shape sampled subgraphs for the ``minibatch_lg`` cells:
+roots [B] + per-hop fanouts (15, 10) are materialised as one flat padded
+graph (union of sampled nodes, sampled edges) so every GNN arch consumes
+it through the same GraphBatch container.
+
+Sampling is in-neighbour (pull) direction: supervision sits on the roots,
+messages flow toward them — matching the dst-sorted edge convention of the
+rest of the framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .structure import Graph, csr_from_graph
+
+__all__ = ["SampledBlock", "NeighborSampler", "sampled_shapes"]
+
+
+@dataclasses.dataclass
+class SampledBlock:
+    """Host-side sampled subgraph with static shapes."""
+    node_ids: np.ndarray   # int32[N_pad]  (global ids; pad = -1)
+    src: np.ndarray        # int32[E_pad]  (local indices; pad = N_pad-1)
+    dst: np.ndarray        # int32[E_pad]
+    edge_mask: np.ndarray  # bool[E_pad]
+    node_mask: np.ndarray  # bool[N_pad]
+    root_local: np.ndarray  # int32[B] — local index of each root
+
+
+def sampled_shapes(batch_nodes: int, fanouts: Sequence[int]) -> tuple[int, int]:
+    """(N_pad, E_pad) for a root batch + fanout schedule."""
+    n_layer = [batch_nodes]
+    e_total = 0
+    for f in fanouts:
+        e_total += n_layer[-1] * f
+        n_layer.append(n_layer[-1] * f)
+    return sum(n_layer), e_total
+
+
+class NeighborSampler:
+    def __init__(self, g: Graph, fanouts: Sequence[int], seed: int = 0):
+        self.fanouts = tuple(fanouts)
+        self.rng = np.random.default_rng(seed)
+        # in-neighbour CSR: for node v, who sends to v
+        self.offsets, self.in_nbrs = csr_from_graph(g, by="dst")
+        self.n = g.n
+
+    def sample(self, roots: np.ndarray) -> SampledBlock:
+        B = roots.size
+        n_pad, e_pad = sampled_shapes(B, self.fanouts)
+        node_ids = np.full(n_pad, -1, np.int64)
+        node_ids[:B] = roots
+        n_count = B
+        srcs, dsts = [], []
+        frontier_lo, frontier_hi = 0, B
+        for f in self.fanouts:
+            frontier = node_ids[frontier_lo:frontier_hi]
+            for li, v in enumerate(frontier):
+                if v < 0:
+                    continue
+                lo, hi = self.offsets[v], self.offsets[v + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                take = min(f, deg)
+                picks = self.rng.choice(deg, size=take, replace=False) + lo
+                nbrs = self.in_nbrs[picks]
+                base = n_count
+                node_ids[base:base + take] = nbrs
+                # edges: sampled neighbour (src) -> frontier node (dst)
+                srcs.extend(range(base, base + take))
+                dsts.extend([frontier_lo + li] * take)
+                n_count += take
+            frontier_lo, frontier_hi = frontier_hi, n_count
+        src = np.full(e_pad, n_pad - 1, np.int32)
+        dst = np.full(e_pad, n_pad - 1, np.int32)
+        edge_mask = np.zeros(e_pad, bool)
+        k = len(srcs)
+        src[:k] = srcs
+        dst[:k] = dsts
+        edge_mask[:k] = True
+        node_mask = node_ids >= 0
+        return SampledBlock(
+            node_ids=node_ids.astype(np.int64),
+            src=src, dst=dst,
+            edge_mask=edge_mask,
+            node_mask=node_mask,
+            root_local=np.arange(B, dtype=np.int32),
+        )

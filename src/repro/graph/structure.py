@@ -1,0 +1,169 @@
+"""Graph container used by every sparse layer in the framework.
+
+The representation is a dst-sorted COO edge list plus per-vertex degree
+metadata.  This single structure backs:
+
+  * the paper's ITA / power-method / forward-push / Monte-Carlo solvers
+    (``repro.core``),
+  * GNN message passing (``repro.models.gnn``),
+  * the 1-D / 2-D edge partitioners used by the distributed runtime
+    (``repro.graph.partition``).
+
+Design notes (TPU adaptation, see DESIGN.md §2):
+  - Edges are sorted by destination so that the scatter-add of the push step
+    becomes a *sorted* ``jax.ops.segment_sum`` — contention-free and
+    deterministic, unlike the paper's CPU atomic adds.
+  - All arrays are int32: vertex counts in scope (≤ ~2.5M for ogb_products)
+    and edge counts (≤ ~115M) fit comfortably; int32 halves index bandwidth
+    versus int64, which matters because ITA's push is bandwidth-bound.
+  - The structure is a pytree (NamedTuple of arrays + static ints via
+    aux data), so it can be donated/sharded by pjit directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Graph", "graph_from_edges", "validate_graph"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A directed graph in dst-sorted COO form.
+
+    Attributes
+    ----------
+    src, dst : int32[m]
+        Edge endpoints, sorted by (dst, src).  Edge ``(src[k], dst[k])``
+        means information flows ``src[k] -> dst[k]``.
+    out_deg : int32[n]
+        Out-degree per vertex.  ``out_deg[i] == 0``  ⇔  dangling vertex.
+    in_deg : int32[n]
+        In-degree per vertex.   ``in_deg[i] == 0``   ⇔  unreferenced vertex.
+    n, m : static ints (aux data, not traced).
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    out_deg: jnp.ndarray
+    in_deg: jnp.ndarray
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    # ---- derived masks (cheap, computed on demand; kept out of the pytree) ----
+    @property
+    def dangling_mask(self) -> jnp.ndarray:
+        """bool[n] — vertices with no out-edges (the paper's V_D)."""
+        return self.out_deg == 0
+
+    @property
+    def unreferenced_mask(self) -> jnp.ndarray:
+        """bool[n] — vertices with no in-edges (exit after one push)."""
+        return self.in_deg == 0
+
+    @property
+    def n_dangling(self) -> jnp.ndarray:
+        return jnp.sum(self.dangling_mask.astype(jnp.int32))
+
+    @property
+    def avg_degree(self) -> float:
+        return self.m / max(self.n, 1)
+
+    def inv_out_deg(self, dtype=jnp.float64) -> jnp.ndarray:
+        """1/deg with 0 at dangling vertices (the raw-P column scale)."""
+        deg = self.out_deg.astype(dtype)
+        return jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
+
+    def stats(self) -> dict:
+        """Host-side summary matching the paper's Table 3 columns."""
+        return dict(
+            n=self.n,
+            m=self.m,
+            nd=int(jax.device_get(self.n_dangling)),
+            n_unref=int(jax.device_get(jnp.sum(self.unreferenced_mask))),
+            deg=round(self.avg_degree, 2),
+        )
+
+
+def graph_from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: int,
+    *,
+    dedup: bool = True,
+    drop_self_loops: bool = False,
+) -> Graph:
+    """Build a dst-sorted :class:`Graph` from host edge arrays.
+
+    Host-side (numpy) on purpose: graph construction is data-pipeline work,
+    done once per dataset; the resulting arrays are device-resident.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape or src.ndim != 1:
+        raise ValueError(f"src/dst must be equal-length 1-D, got {src.shape} {dst.shape}")
+    if src.size:
+        if src.min() < 0 or src.max() >= n or dst.min() < 0 or dst.max() >= n:
+            raise ValueError("edge endpoint out of range")
+    if drop_self_loops:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+    if dedup and src.size:
+        # unique over (dst, src) pairs; also yields the dst-major sort we want.
+        key = dst * np.int64(n) + src
+        key = np.unique(key)
+        dst = (key // n).astype(np.int32)
+        src = (key % n).astype(np.int32)
+    else:
+        order = np.lexsort((src, dst))
+        src = src[order].astype(np.int32)
+        dst = dst[order].astype(np.int32)
+    out_deg = np.bincount(src, minlength=n).astype(np.int32)
+    in_deg = np.bincount(dst, minlength=n).astype(np.int32)
+    return Graph(
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        out_deg=jnp.asarray(out_deg),
+        in_deg=jnp.asarray(in_deg),
+        n=int(n),
+        m=int(src.size),
+    )
+
+
+def validate_graph(g: Graph) -> None:
+    """Cheap invariants; used by tests and the data pipeline."""
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    assert src.shape == (g.m,) and dst.shape == (g.m,)
+    assert g.out_deg.shape == (g.n,) and g.in_deg.shape == (g.n,)
+    assert int(np.sum(np.asarray(g.out_deg))) == g.m
+    assert int(np.sum(np.asarray(g.in_deg))) == g.m
+    if g.m:
+        assert np.all(np.diff(dst.astype(np.int64) * g.n + src) > 0), "edges not dst-sorted/unique"
+
+
+def csr_from_graph(g: Graph, by: str = "src") -> tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR (offsets, indices).
+
+    ``by='src'`` gives out-neighbour lists (random-walk / Monte-Carlo use);
+    ``by='dst'`` gives in-neighbour lists (pull-style SpMV / samplers).
+    """
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    if by == "src":
+        order = np.argsort(src, kind="stable")
+        keys, vals = src[order], dst[order]
+        deg = np.asarray(g.out_deg)
+    elif by == "dst":
+        keys, vals = dst, src  # already dst-sorted
+        deg = np.asarray(g.in_deg)
+    else:
+        raise ValueError(by)
+    offsets = np.zeros(g.n + 1, dtype=np.int64)
+    np.cumsum(deg, out=offsets[1:])
+    del keys
+    return offsets, vals.astype(np.int32)

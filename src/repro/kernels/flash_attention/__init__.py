@@ -1,0 +1,7 @@
+from .kernel import flash_decode, flash_prefill_causal
+from .ops import attention_decode, attention_prefill_causal
+from .ref import decode_ref, prefill_causal_ref, repeat_kv
+
+__all__ = ["attention_decode", "attention_prefill_causal", "decode_ref",
+           "flash_decode", "flash_prefill_causal", "prefill_causal_ref",
+           "repeat_kv"]

@@ -1,0 +1,34 @@
+"""Dispatching wrapper: Pallas on TPU, oracle fallback elsewhere.
+
+Model code calls ``attention_decode`` / ``attention_prefill_causal``; the
+backend decides whether the Pallas kernel can actually be *compiled*
+(TPU) or whether the pure-jnp oracle is used (CPU dry-run / tests — the
+kernels themselves are still validated under interpret=True).
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_decode, flash_prefill_causal
+from .ref import decode_ref, prefill_causal_ref
+
+__all__ = ["attention_decode", "attention_prefill_causal"]
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention_decode(q, k, v, *, block_s: int = 512, force_pallas: bool = False):
+    if force_pallas or _use_pallas():
+        return flash_decode(q, k, v, block_s=block_s,
+                            interpret=not _use_pallas())
+    return decode_ref(q, k, v)
+
+
+def attention_prefill_causal(q, k, v, *, block_q: int = 256, block_s: int = 256,
+                             force_pallas: bool = False):
+    if force_pallas or _use_pallas():
+        return flash_prefill_causal(q, k, v, block_q=block_q, block_s=block_s,
+                                    interpret=not _use_pallas())
+    return prefill_causal_ref(q, k, v)

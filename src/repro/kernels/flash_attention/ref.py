@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for flash attention (GQA-aware, f32 softmax)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["decode_ref", "prefill_causal_ref", "repeat_kv"]
+
+
+def repeat_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """[B, Hk, S, D] -> [B, Hk*group, S, D] by head repetition."""
+    if group == 1:
+        return x
+    B, Hk, S, D = x.shape
+    return jnp.broadcast_to(x[:, :, None], (B, Hk, group, S, D)).reshape(B, Hk * group, S, D)
+
+
+def decode_ref(q, k, v):
+    B, Hq, D = q.shape
+    _, Hk, S, _ = k.shape
+    k = repeat_kv(k, Hq // Hk).astype(jnp.float32)
+    v = repeat_kv(v, Hq // Hk).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bhd,bhsd->bhs", qf, k)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", p, v).astype(q.dtype)
+
+
+def prefill_causal_ref(q, k, v):
+    B, Hq, T, D = q.shape
+    _, Hk, S, _ = k.shape
+    k = repeat_kv(k, Hq // Hk).astype(jnp.float32)
+    v = repeat_kv(v, Hq // Hk).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bhtd,bhsd->bhts", qf, k)
+    mask = jnp.tril(jnp.ones((T, S), bool))
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v).astype(q.dtype)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the spmv_ell kernel (per-bucket and full-graph)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...sparse.ell import ELLGraph, spmv_ell_ref  # re-export full-graph oracle
+
+__all__ = ["spmv_ell_bucket_ref", "spmv_ell_ref"]
+
+
+def spmv_ell_bucket_ref(w_padded: jnp.ndarray, src_idx: jnp.ndarray) -> jnp.ndarray:
+    """y[r] = sum_k w_padded[src_idx[r, k]] — the kernel's contract."""
+    return jnp.sum(w_padded[src_idx], axis=1)

@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes, record memory_analysis / cost_analysis /
+collective schedule.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Success here is the deliverable: sharding mismatches, compile-time OOM and
+unsupported collectives are bugs in the framework, not in the run.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             save_hlo: bool = False) -> dict:
+    import jax
+
+    from ..configs import get_arch
+    from ..roofline.analysis import analyze_compiled, collective_bytes_from_hlo
+    from .mesh import make_production_mesh
+    from .steps import build_job
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(f"{k}={v}" for k, v in mesh.shape.items())
+    chips = mesh.size
+    spec = get_arch(arch)
+    cell = next(c for c in spec.cells if c.name == shape)
+    rec: dict = dict(arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+                     kind=cell.kind)
+    if cell.skip:
+        rec.update(status="skipped", reason=cell.skip)
+        return rec
+
+    t0 = time.time()
+    try:
+        with mesh:
+            job = build_job(arch, shape, mesh)
+            lowered = job.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+            hlo = compiled.as_text()
+
+            mem_stats = {}
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                if hasattr(mem, attr):
+                    mem_stats[attr] = int(getattr(mem, attr))
+            # per-device residency: args are sharded; temp is per-program
+            args_b = mem_stats.get("argument_size_in_bytes", 0)
+            temp_b = mem_stats.get("temp_size_in_bytes", 0)
+            out_b = mem_stats.get("output_size_in_bytes", 0)
+            alias_b = mem_stats.get("alias_size_in_bytes", 0)
+            bytes_per_device = args_b + temp_b + out_b - alias_b
+            mem_stats["bytes_per_device"] = bytes_per_device
+
+            model_flops = _model_flops(arch, shape, cell)
+            rep = analyze_compiled(
+                f"{arch}:{shape}", mesh_desc, chips, cost, hlo,
+                model_flops=model_flops, memory_stats=mem_stats)
+
+            rec.update(
+                status="ok",
+                lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                memory=mem_stats,
+                cost={k: cost.get(k) for k in
+                      ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+                      if k in cost},
+                roofline=rep.to_dict(),
+            )
+            if save_hlo:
+                hpath = out_dir / f"{arch}_{shape}_{'mp' if multi_pod else 'sp'}.hlo"
+                hpath.write_text(hlo)
+                rec["hlo_path"] = str(hpath)
+    except Exception as e:  # a failure here is a framework bug — record it
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return rec
+
+
+def _model_flops(arch: str, shape: str, cell) -> float | None:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for LM train cells;
+    analytic per-family estimates elsewhere (§Roofline useful-compute ratio)."""
+    from ..configs import get_arch
+    spec = get_arch(arch)
+    if spec.family == "lm":
+        from ..models.lm import active_lm_params, count_lm_params
+        cfg = spec.make_config()
+        n_active = active_lm_params(cfg)
+        tokens = cell.meta["global_batch"] * cell.meta["seq_len"]
+        if cell.kind == "train":
+            return 6.0 * n_active * tokens
+        if cell.kind == "prefill":
+            return 2.0 * n_active * tokens
+        if cell.kind == "decode":
+            # one token per sequence + KV-cache attention reads
+            return 2.0 * n_active * cell.meta["global_batch"]
+    if spec.family == "pagerank":
+        # one ITA iteration: ~2 flops per edge (scale + add)
+        return 2.0 * cell.meta["m"]
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    from ..configs import all_cells
+
+    if args.all:
+        cells = [(s.name, c.name) for s, c in all_cells()]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for arch, shape in cells:
+            tag = f"{arch}:{shape}:{'2pod' if mp else '1pod'}"
+            print(f"=== {tag} ===", flush=True)
+            rec = run_cell(arch, shape, mp, out_dir, save_hlo=args.save_hlo)
+            results.append(rec)
+            fname = out_dir / f"{arch.replace('/', '_')}_{shape}_{'mp' if mp else 'sp'}.json"
+            fname.write_text(json.dumps(rec, indent=1, default=str))
+            status = rec["status"]
+            if status == "ok":
+                m = rec["memory"]["bytes_per_device"] / 1e9
+                r = rec["roofline"]
+                print(f"  OK  lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                      f"mem/dev={m:.2f}GB flops={r['hlo_flops']:.3e} "
+                      f"coll={r['collective_bytes']:.3e}B dominant={r['dominant']}",
+                      flush=True)
+            elif status == "skipped":
+                print(f"  SKIP {rec['reason']}", flush=True)
+            else:
+                print(f"  FAIL {rec['error']}", flush=True)
+
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n{len(results)} cells: {sum(r['status']=='ok' for r in results)} ok, "
+          f"{sum(r['status']=='skipped' for r in results)} skipped, {n_err} failed")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ must precede jax import (same contract as dryrun.py).
+"""§Perf hillclimb runner: lower+compile named experiment variants and
+report the roofline delta vs. the recorded baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --exp gc2d
+    PYTHONPATH=src python -m repro.launch.perf --exp granite_bf16_scores
+    PYTHONPATH=src python -m repro.launch.perf --list
+
+Each experiment is a (hypothesis, change) pair logged in EXPERIMENTS.md
+§Perf; this runner produces the 'measure' column.
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+
+def _analyze(job, mesh, name, model_flops=None):
+    from ..roofline.analysis import analyze_compiled
+
+    t0 = time.time()
+    with mesh:
+        lowered = job.lower()
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+    hlo = compiled.as_text()
+    mem_stats = {a: int(getattr(mem, a)) for a in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes")
+                 if hasattr(mem, a)}
+    mem_stats["bytes_per_device"] = (mem_stats.get("argument_size_in_bytes", 0)
+                                     + mem_stats.get("temp_size_in_bytes", 0)
+                                     + mem_stats.get("output_size_in_bytes", 0)
+                                     - mem_stats.get("alias_size_in_bytes", 0))
+    rep = analyze_compiled(name, "x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+                           mesh.size, cost, hlo, model_flops=model_flops,
+                           memory_stats=mem_stats)
+    out = dict(name=name, compile_s=round(time.time() - t0, 1),
+               memory=mem_stats, roofline=rep.to_dict())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# experiments
+# ---------------------------------------------------------------------------
+def exp_gc2d(multi_pod=False, **geom_overrides):
+    """graphcast × ogb_products with the ITA 2-D partition (shard_map)."""
+    from ..models.gnn.sharded_mp import build_gc2d_job
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    job = build_gc2d_job(mesh, n=2_449_029, m=61_859_140, d_feat=100,
+                         n_classes=47, **geom_overrides)
+    return _analyze(job, mesh, job.name + str(geom_overrides or ""))
+
+
+def exp_lm_variant(arch="granite-34b", shape="train_4k", multi_pod=False,
+                   **cfg_overrides):
+    """Lower an LM train cell with config overrides (q_chunk, remat_group,
+    attn dtype flags...) for the granite hillclimb."""
+    from ..configs import get_arch
+    from .dryrun import _model_flops
+    from .mesh import make_production_mesh
+    from .steps import build_job
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = get_arch(arch)
+    if cfg_overrides:
+        base_make = spec.make_config
+
+        def patched():
+            return dataclasses.replace(base_make(), **cfg_overrides)
+
+        spec = dataclasses.replace(spec, make_config=patched)
+        import repro.configs.registry as reg
+        reg.ARCH_REGISTRY[arch] = spec
+    job = build_job(arch, shape, mesh)
+    cell = next(c for c in spec.cells if c.name == shape)
+    return _analyze(job, mesh, f"{arch}:{shape}:{cfg_overrides or 'base'}",
+                    model_flops=_model_flops(arch, shape, cell))
+
+
+def _gc2d_bf16(**kw):
+    import jax.numpy as jnp
+
+    return exp_gc2d(edge_dtype=jnp.bfloat16, **kw)
+
+
+def exp_pagerank_variant(dataset="in-2004", multi_pod=False, dtype="f32",
+                         pad_factor=1.3):
+    """Pagerank 2-D step variants (dtype, padding) for the ITA hillclimb."""
+    import jax.numpy as jnp
+
+    from ..configs import get_arch
+    from ..core.distributed import build_pagerank_job
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = get_arch("pagerank")
+    cell = next(c for c in spec.cells if c.name == dataset)
+    job = build_pagerank_job(spec, cell, mesh)
+    return _analyze(job, mesh, f"pagerank:{dataset}:{dtype}",
+                    model_flops=2.0 * cell.meta["m"])
+
+
+def exp_pagerank_compressed(dataset="in-2004", multi_pod=False):
+    """2-D ITA with bf16 wire + error feedback (half the ICI bytes)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import get_arch
+    from ..core.distributed import make_ita_2d_step_compressed
+    from .mesh import make_production_mesh
+    from .steps import LoweringJob
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = get_arch("pagerank")
+    cell = next(c for c in spec.cells if c.name == dataset)
+    n, m = cell.meta["n"], cell.meta["m"]
+    row_axis, col_axis = "data", "model"
+    R, C = mesh.shape["data"], mesh.shape["model"]
+    if "pod" in mesh.axis_names:
+        row_axis = ("pod", "data")
+        R = mesh.shape["pod"] * mesh.shape["data"]
+    n_pad = ((n + R * C - 1) // (R * C)) * (R * C)
+    nr, nc = n_pad // R, n_pad // C
+    e_pad = ((int(m / (R * C) * 1.3) + 15) // 8) * 8
+    sm = make_ita_2d_step_compressed(
+        mesh, dict(nr=nr, nc=nc, sub=n_pad // (R * C), n_pad=n_pad),
+        0.85, 1e-10, row_axis, col_axis)
+    dtype = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((n_pad,), dtype),
+        jax.ShapeDtypeStruct((n_pad,), dtype),
+        jax.ShapeDtypeStruct((R, C, nr), dtype),
+        jax.ShapeDtypeStruct((R, C, e_pad), jnp.int32),
+        jax.ShapeDtypeStruct((R, C, e_pad), jnp.int32),
+        jax.ShapeDtypeStruct((n_pad,), dtype),
+        jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+    )
+    ns = lambda s: NamedSharding(mesh, s)
+    in_sh = (ns(P(col_axis)), ns(P(col_axis)), ns(P(row_axis, col_axis, None)),
+             ns(P(row_axis, col_axis, None)), ns(P(row_axis, col_axis, None)),
+             ns(P(col_axis)), ns(P(col_axis)))
+    job = LoweringJob(name=f"pagerank:{dataset}:compressed", step_fn=sm,
+                      args=args, in_shardings=in_sh, rules=None,
+                      donate_argnums=(0, 1, 2))
+    return _analyze(job, mesh, job.name, model_flops=2.0 * m)
+
+
+EXPERIMENTS = {
+    "pagerank_compressed": lambda: exp_pagerank_compressed(),
+    "gc2d": lambda: exp_gc2d(),
+    "gc2d_mp": lambda: exp_gc2d(multi_pod=True),
+    "gc2d_bf16e": lambda: _gc2d_bf16(),
+    "gc2d_bf16e_rg8": lambda: _gc2d_bf16(remat_g=8),
+    "granite_base": lambda: exp_lm_variant(),
+    "granite_qc256": lambda: exp_lm_variant(q_chunk=256),
+    "granite_qc1024": lambda: exp_lm_variant(q_chunk=1024),
+    "granite_rg4": lambda: exp_lm_variant(remat_group=4),
+    "granite_rg16": lambda: exp_lm_variant(remat_group=16),
+    "pagerank_base": lambda: exp_pagerank_variant(),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args(argv)
+    if args.list:
+        print("\n".join(EXPERIMENTS))
+        return 0
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    rec = EXPERIMENTS[args.exp]()
+    (out_dir / f"{args.exp}.json").write_text(json.dumps(rec, indent=1, default=str))
+    rf = rec["roofline"]
+    print(f"{rec['name']}: mem/dev={rec['memory']['bytes_per_device']/1e9:.2f}GB "
+          f"compute={rf['compute_s']:.3f}s memory={rf['memory_s']:.3f}s "
+          f"collective={rf['collective_s']:.3f}s dominant={rf['dominant']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

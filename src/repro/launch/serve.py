@@ -1,0 +1,89 @@
+"""Batched serving driver: continuous decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+
+Serving loop structure (the real-deployment shape):
+  1. prefill the batch (one fwd pass, emits the KV cache);
+  2. decode step-by-step, greedily sampling, updating the cache in place
+     (donated buffers);
+  3. report tokens/s and per-step latency percentiles.
+
+On the production mesh the same functions lower with serving shardings
+(params TP-replicated over data; KV sharded per launch/steps.py); here it
+runs the reduced config on CPU end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_arch, get_config
+from ..models.lm import init_kv_cache, init_lm_params, lm_decode_step, lm_prefill
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    if spec.family != "lm":
+        raise SystemExit("serving driver covers the LM family")
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_lm_params(key, cfg)
+
+    max_seq = args.prompt_len + args.gen
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    prefill = jax.jit(lambda p, t: lm_prefill(p, t, cfg))
+    decode = jax.jit(lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg),
+                     donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, kvs = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # seed the decode cache from the prefill K/V (pad to max_seq)
+    k, v = kvs
+    caches = init_kv_cache(cfg, args.batch, max_seq, dtype=k.dtype)
+    caches = (jax.lax.dynamic_update_slice(caches[0], k, (0, 0, 0, 0, 0)),
+              jax.lax.dynamic_update_slice(caches[1], v, (0, 0, 0, 0, 0)))
+
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out_tokens = [token]
+    lat = []
+    for i in range(args.gen - 1):
+        t1 = time.perf_counter()
+        logits, caches = decode(params, caches, token,
+                                jnp.int32(args.prompt_len + i))
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(token)
+        lat.append(time.perf_counter() - t1)
+        out_tokens.append(token)
+
+    lat_ms = np.asarray(lat[1:]) * 1e3  # drop decode-compile step
+    toks = args.batch * len(out_tokens)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={len(out_tokens)}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms   decode p50/p99: "
+          f"{np.percentile(lat_ms, 50):.1f}/{np.percentile(lat_ms, 99):.1f} ms   "
+          f"throughput: {toks / (sum(lat) + t_prefill):.1f} tok/s")
+    seq = np.asarray(jnp.stack(out_tokens, axis=1))
+    print("first sequence head:", seq[0, :8].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,111 @@
+"""Logical-axis sharding rules (MaxText-style, reduced to the essentials).
+
+Models annotate intermediates with *logical* axis names via ``constrain``;
+the launcher activates an :class:`AxisRules` mapping logical names to mesh
+axes.  Outside any rule context ``constrain`` is the identity, so the same
+model code runs single-device (smoke tests) and on the 512-chip mesh
+(dry-run) unchanged.
+
+Parameter shardings are path-pattern rules (regex on the pytree path) —
+every param leaf in this framework lives in a plain dict pytree, so paths
+are stable strings like ``layers/attn/q/w``.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "axis_rules", "constrain", "current_rules",
+           "param_shardings", "spec_for_path"]
+
+_state = threading.local()
+
+
+class AxisRules:
+    """logical axis name -> mesh axis (str), tuple of axes, or None."""
+
+    def __init__(self, mesh: Mesh, mapping: dict[str, Union[str, tuple, None]]):
+        self.mesh = mesh
+        self.mapping = dict(mapping)
+
+    def resolve(self, logical_axes: Sequence[Optional[str]]) -> P:
+        out = []
+        for ax in logical_axes:
+            m = self.mapping.get(ax) if ax is not None else None
+            out.append(m)
+        return P(*out)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jnp.ndarray, *logical_axes: Optional[str]) -> jnp.ndarray:
+    """Apply with_sharding_constraint if rules are active; else identity."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.resolve(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding by pytree-path regex
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, rules: list[tuple[str, P]]) -> P:
+    for pattern, spec in rules:
+        if re.search(pattern, path_str):
+            return spec
+    return P()  # replicate by default
+
+
+def param_shardings(params, mesh: Mesh, rules: list[tuple[str, P]]):
+    """pytree of NamedSharding matching ``params`` by path-regex rules.
+
+    Rules are checked in order; first match wins; unmatched leaves
+    replicate.  A rule's PartitionSpec is trimmed/padded to the leaf rank
+    (trailing None), so one rule can cover stacked [L, ...] and unstacked
+    leaves.
+    """
+
+    def leaf_sharding(path, leaf):
+        ps = spec_for_path(_path_str(path), rules)
+        ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+        parts = list(ps)
+        if len(parts) > ndim:
+            # drop trailing Nones first; error if real axes don't fit
+            while len(parts) > ndim and parts and parts[-1] is None:
+                parts.pop()
+            if len(parts) > ndim:
+                raise ValueError(f"spec {ps} too long for {path} rank {ndim}")
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, params)

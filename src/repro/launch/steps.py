@@ -1,0 +1,372 @@
+"""Lowering jobs: (architecture × shape-cell) -> step fn + abstract inputs +
+shardings.  Consumed by launch/dryrun.py (512-device compile) and by the
+roofline report.
+
+Nothing here allocates device memory for the full configs: parameters and
+optimizer state come from ``jax.eval_shape`` over the real init functions,
+inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_arch
+from ..models.gnn import GNN_REGISTRY
+from ..models.gnn.common import GraphBatch
+from ..models.lm import (
+    init_kv_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_loss,
+    lm_prefill,
+)
+from ..models.recsys import (
+    xdeepfm_forward,
+    xdeepfm_init,
+    xdeepfm_loss,
+    xdeepfm_score_candidates,
+)
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from .mesh import (
+    batch_axes,
+    gnn_axis_rules,
+    lm_axis_rules,
+    lm_param_rules,
+    recsys_axis_rules,
+    recsys_param_rules,
+)
+from .sharding import AxisRules, axis_rules, param_shardings
+
+__all__ = ["LoweringJob", "build_job"]
+
+KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)  # abstract PRNG key
+
+
+@dataclasses.dataclass
+class LoweringJob:
+    name: str
+    step_fn: Callable
+    args: tuple                 # pytree of ShapeDtypeStruct
+    in_shardings: tuple
+    rules: Optional[AxisRules]  # activation rules active during trace
+    donate_argnums: tuple = ()
+    static_meta: dict = dataclasses.field(default_factory=dict)
+
+    def lower(self):
+        with axis_rules(self.rules):
+            return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                           donate_argnums=self.donate_argnums).lower(*self.args)
+
+
+def _replicated(tree, mesh):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _serving_rules(rules: list) -> list:
+    """Serving posture: FSDP axis dropped (params replicated over data)."""
+    out = []
+    for pat, spec in rules:
+        out.append((pat, P(*[None if ax == "data" else ax for ax in spec])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LM jobs
+# ---------------------------------------------------------------------------
+def _lm_state_shapes(cfg, opt_cfg):
+    params = jax.eval_shape(lambda k: init_lm_params(k, cfg), KEY)
+    opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+    return params, opt
+
+
+def _lm_train_job(spec, cell, mesh: Mesh) -> LoweringJob:
+    cfg = spec.make_config()
+    opt_cfg = AdamWConfig()
+    params_s, opt_s = _lm_state_shapes(cfg, opt_cfg)
+    T, GB = cell.meta["seq_len"], cell.meta["global_batch"]
+    batch_s = {
+        "tokens": jax.ShapeDtypeStruct((GB, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((GB, T), jnp.int32),
+    }
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, batch, cfg), has_aux=True)(params)
+        lr = warmup_cosine(opt_state["step"], peak_lr=opt_cfg.lr, warmup=2000,
+                           total=100_000)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg, lr=lr)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    rules = lm_param_rules(mesh)
+    in_sh = (
+        param_shardings(params_s, mesh, rules),
+        param_shardings(opt_s, mesh, rules),
+        {"tokens": NamedSharding(mesh, P(batch_axes(mesh), None)),
+         "labels": NamedSharding(mesh, P(batch_axes(mesh), None))},
+    )
+    return LoweringJob(
+        name=f"{spec.name}:{cell.name}",
+        step_fn=train_step,
+        args=(params_s, opt_s, batch_s),
+        in_shardings=in_sh,
+        rules=lm_axis_rules(mesh, cfg),
+        donate_argnums=(0, 1),
+    )
+
+
+def _lm_prefill_job(spec, cell, mesh: Mesh) -> LoweringJob:
+    cfg = spec.make_config()
+    params_s = jax.eval_shape(lambda k: init_lm_params(k, cfg), KEY)
+    T, GB = cell.meta["seq_len"], cell.meta["global_batch"]
+    tokens_s = jax.ShapeDtypeStruct((GB, T), jnp.int32)
+
+    def prefill_step(params, tokens):
+        return lm_prefill(params, tokens, cfg)
+
+    rules = _serving_rules(lm_param_rules(mesh))
+    in_sh = (
+        param_shardings(params_s, mesh, rules),
+        NamedSharding(mesh, P(batch_axes(mesh), None)),
+    )
+    return LoweringJob(
+        name=f"{spec.name}:{cell.name}",
+        step_fn=prefill_step,
+        args=(params_s, tokens_s),
+        in_shardings=in_sh,
+        rules=lm_axis_rules(mesh, cfg),
+    )
+
+
+def _lm_decode_job(spec, cell, mesh: Mesh) -> LoweringJob:
+    cfg = spec.make_config()
+    params_s = jax.eval_shape(lambda k: init_lm_params(k, cfg), KEY)
+    S, GB = cell.meta["seq_len"], cell.meta["global_batch"]
+    caches_s = jax.eval_shape(lambda: init_kv_cache(cfg, GB, S))
+    token_s = jax.ShapeDtypeStruct((GB,), jnp.int32)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_step(params, caches, token, pos):
+        return lm_decode_step(params, caches, token, pos, cfg)
+
+    model_size = mesh.shape["model"]
+    kv_on_heads = cfg.n_kv_heads % model_size == 0 and cfg.n_kv_heads >= model_size
+    if kv_on_heads:
+        kv_spec = P(None, batch_axes(mesh), None, "model", None)
+    else:
+        kv_spec = P(None, batch_axes(mesh), "model", None, None)  # seq-sharded KV
+    rules = _serving_rules(lm_param_rules(mesh))
+    in_sh = (
+        param_shardings(params_s, mesh, rules),
+        (NamedSharding(mesh, kv_spec), NamedSharding(mesh, kv_spec)),
+        NamedSharding(mesh, P(batch_axes(mesh))),
+        NamedSharding(mesh, P()),
+    )
+    return LoweringJob(
+        name=f"{spec.name}:{cell.name}",
+        step_fn=decode_step,
+        args=(params_s, caches_s, token_s, pos_s),
+        in_shardings=in_sh,
+        rules=lm_axis_rules(mesh, cfg, decode=True),
+        donate_argnums=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN jobs
+# ---------------------------------------------------------------------------
+def _round_up(x: int, k: int = 512) -> int:
+    """Pad graph dims to a multiple of 512 (≥ any batch-axis product; pad
+    nodes/edges are masked out — GraphBatch is a padded container by design)."""
+    return ((x + k - 1) // k) * k
+
+
+def _graphbatch_shapes(meta: dict, dtype=jnp.float32) -> GraphBatch:
+    if "batch" in meta:  # molecule: batched small graphs
+        G = meta["batch"]
+        N, E = _round_up(G * meta["n_nodes"]), _round_up(G * meta["n_edges"])
+        n_graphs = G
+        targets = jax.ShapeDtypeStruct((G,), jnp.float32)
+        tmask = jax.ShapeDtypeStruct((G,), jnp.bool_)
+    elif "batch_nodes" in meta:  # sampled minibatch
+        from ..graph.sampler import sampled_shapes
+        N, E = sampled_shapes(meta["batch_nodes"], meta["fanout"])
+        N, E = _round_up(N), _round_up(E)
+        n_graphs = 1
+        targets = jax.ShapeDtypeStruct((N,), jnp.int32)
+        tmask = jax.ShapeDtypeStruct((N,), jnp.bool_)
+    else:  # full graph
+        N, E = _round_up(meta["n_nodes"]), _round_up(meta["n_edges"])
+        n_graphs = 1
+        targets = jax.ShapeDtypeStruct((N,), jnp.int32)
+        tmask = jax.ShapeDtypeStruct((N,), jnp.bool_)
+    d_feat = meta.get("d_feat", 32)
+    return GraphBatch(
+        nodes=jax.ShapeDtypeStruct((N, d_feat), dtype),
+        src=jax.ShapeDtypeStruct((E,), jnp.int32),
+        dst=jax.ShapeDtypeStruct((E,), jnp.int32),
+        edge_feats=jax.ShapeDtypeStruct((E, 0), dtype),
+        node_mask=jax.ShapeDtypeStruct((N,), jnp.bool_),
+        edge_mask=jax.ShapeDtypeStruct((E,), jnp.bool_),
+        graph_ids=jax.ShapeDtypeStruct((N,), jnp.int32),
+        targets=targets,
+        target_mask=tmask,
+        pos=jax.ShapeDtypeStruct((N, 3), dtype),
+        n_graphs=n_graphs,
+    )
+
+
+def _graphbatch_shardings(batch: GraphBatch, mesh: Mesh, cfg=None):
+    d_hidden = getattr(cfg, "d_hidden", 0) if cfg is not None else 0
+    # must mirror gnn_axis_rules' regime choice
+    nsh = batch_axes(mesh) if d_hidden >= 256 else tuple(mesh.axis_names)
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+    node_level = batch.targets.shape[0] == batch.nodes.shape[0]
+    # graph-level targets (molecule cells: one scalar per graph, 128 of
+    # them) shard over the data axes only — too few rows for all 512 ways.
+    tsh = ns(nsh) if node_level else ns(batch_axes(mesh))
+    return GraphBatch(
+        nodes=ns(nsh, None), src=ns(nsh), dst=ns(nsh),
+        edge_feats=ns(nsh, None), node_mask=ns(nsh), edge_mask=ns(nsh),
+        graph_ids=ns(nsh),
+        targets=tsh,
+        target_mask=tsh,
+        pos=ns(nsh, None),
+        n_graphs=batch.n_graphs,
+    )
+
+
+def _gnn_train_job(spec, cell, mesh: Mesh) -> LoweringJob:
+    init, fwd, loss_fn, _ = GNN_REGISTRY[spec.name]
+    cfg = spec.make_config()
+    meta = cell.meta
+    batch_s = _graphbatch_shapes(meta)
+    n_out = 1 if batch_s.n_graphs > 1 else meta.get("n_classes", 2)
+    d_feat = batch_s.nodes.shape[1]
+    params_s = jax.eval_shape(lambda k: init(k, cfg, d_feat, 0, n_out), KEY)
+    opt_cfg = AdamWConfig(grad_clip=1.0)
+    opt_s = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_s)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    in_sh = (
+        _replicated(params_s, mesh),
+        _replicated(opt_s, mesh),
+        _graphbatch_shardings(batch_s, mesh, cfg),
+    )
+    return LoweringJob(
+        name=f"{spec.name}:{cell.name}",
+        step_fn=train_step,
+        args=(params_s, opt_s, batch_s),
+        in_shardings=in_sh,
+        rules=gnn_axis_rules(mesh, cfg),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys jobs
+# ---------------------------------------------------------------------------
+def _xdeepfm_batch_shapes(B: int, n_fields: int):
+    return {
+        "ids": jax.ShapeDtypeStruct((B, n_fields), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B,), jnp.float32),
+    }
+
+
+def _recsys_job(spec, cell, mesh: Mesh) -> LoweringJob:
+    cfg = spec.make_config()
+    params_s = jax.eval_shape(lambda k: xdeepfm_init(k, cfg), KEY)
+    rules = recsys_param_rules(mesh)
+    bsh = batch_axes(mesh)
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_s)
+        batch_s = _xdeepfm_batch_shapes(cell.meta["batch"], cfg.n_fields)
+
+        def train_step(params, opt_state, batch):
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: xdeepfm_loss(p, batch, cfg), has_aux=True)(params)
+            params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, **om}
+
+        in_sh = (
+            param_shardings(params_s, mesh, rules),
+            param_shardings(opt_s, mesh, rules),
+            {"ids": NamedSharding(mesh, P(bsh, None)),
+             "labels": NamedSharding(mesh, P(bsh))},
+        )
+        return LoweringJob(
+            name=f"{spec.name}:{cell.name}", step_fn=train_step,
+            args=(params_s, opt_s, batch_s), in_shardings=in_sh,
+            rules=recsys_axis_rules(mesh), donate_argnums=(0, 1))
+
+    if cell.kind == "serve":
+        B = cell.meta["batch"]
+        ids_s = jax.ShapeDtypeStruct((B, cfg.n_fields), jnp.int32)
+
+        def serve_step(params, ids):
+            return xdeepfm_forward(params, ids, cfg)
+
+        in_sh = (param_shardings(params_s, mesh, rules),
+                 NamedSharding(mesh, P(bsh, None)))
+        return LoweringJob(
+            name=f"{spec.name}:{cell.name}", step_fn=serve_step,
+            args=(params_s, ids_s), in_shardings=in_sh,
+            rules=recsys_axis_rules(mesh))
+
+    if cell.kind == "retrieval":
+        C = cell.meta["n_candidates"]
+        n_item = cfg.n_fields - cfg.n_user_fields
+        user_s = jax.ShapeDtypeStruct((cfg.n_user_fields,), jnp.int32)
+        cand_s = jax.ShapeDtypeStruct((C, n_item), jnp.int32)
+
+        def retrieval_step(params, user_ids, cand_ids):
+            return xdeepfm_score_candidates(params, user_ids, cand_ids, cfg)
+
+        in_sh = (param_shardings(params_s, mesh, rules),
+                 NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P(bsh, None)))
+        return LoweringJob(
+            name=f"{spec.name}:{cell.name}", step_fn=retrieval_step,
+            args=(params_s, user_s, cand_s), in_shardings=in_sh,
+            rules=recsys_axis_rules(mesh))
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+def build_job(arch: str, cell_name: str, mesh: Mesh) -> LoweringJob:
+    spec = get_arch(arch)
+    cell = next(c for c in spec.cells if c.name == cell_name)
+    if cell.skip:
+        raise ValueError(f"cell {arch}:{cell_name} is skipped: {cell.skip}")
+    if spec.family == "lm":
+        if cell.kind == "train":
+            return _lm_train_job(spec, cell, mesh)
+        if cell.kind == "prefill":
+            return _lm_prefill_job(spec, cell, mesh)
+        if cell.kind == "decode":
+            return _lm_decode_job(spec, cell, mesh)
+    if spec.family == "gnn":
+        return _gnn_train_job(spec, cell, mesh)
+    if spec.family == "recsys":
+        return _recsys_job(spec, cell, mesh)
+    if spec.family == "pagerank":
+        from ..core.distributed import build_pagerank_job
+        return build_pagerank_job(spec, cell, mesh)
+    raise ValueError(f"{spec.family}/{cell.kind}")

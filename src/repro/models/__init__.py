@@ -1,0 +1,19 @@
+"""Architecture zoo: LM (dense + MoE), GNN, RecSys families."""
+from . import gnn, recsys
+from .layers import cross_entropy_loss
+from .lm import (
+    LMConfig,
+    count_lm_params,
+    init_kv_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_loss,
+    lm_prefill,
+)
+from .moe import MoEConfig
+
+__all__ = [
+    "LMConfig", "MoEConfig", "count_lm_params", "cross_entropy_loss", "gnn",
+    "init_kv_cache", "init_lm_params", "lm_decode_step", "lm_loss",
+    "lm_prefill", "recsys",
+]

@@ -1,0 +1,14 @@
+"""GNN architecture family — all four assigned archs register themselves."""
+from .common import GNN_REGISTRY, GraphBatch, gather_scatter, graph_readout
+from .gin import GINConfig, gin_forward, gin_init, gin_loss
+from .graphcast import GraphCastConfig, graphcast_forward, graphcast_init, graphcast_loss
+from .meshgraphnet import MGNConfig, mgn_forward, mgn_init, mgn_loss
+from .schnet import SchNetConfig, schnet_forward, schnet_init, schnet_loss
+
+__all__ = [
+    "GNN_REGISTRY", "GINConfig", "GraphBatch", "GraphCastConfig", "MGNConfig",
+    "SchNetConfig", "gather_scatter", "gin_forward", "gin_init", "gin_loss",
+    "graph_readout", "graphcast_forward", "graphcast_init", "graphcast_loss",
+    "mgn_forward", "mgn_init", "mgn_loss", "schnet_forward", "schnet_init",
+    "schnet_loss",
+]

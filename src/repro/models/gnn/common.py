@@ -1,0 +1,87 @@
+"""Shared GNN substrate: flat-graph batch container + message passing.
+
+Everything — full-batch graphs (cora/ogb_products), fanout-sampled blocks
+(minibatch_lg) and batched small molecules — is expressed as ONE flat
+padded graph:
+
+    nodes:      [N, d_feat]   (padded; pad nodes have mask 0)
+    edge_index: src/dst int32 [E] (padded; pad edges point at node N-1 with
+                mask 0 — masked messages contribute 0)
+    node_mask:  bool [N]
+    edge_mask:  bool [E]
+    graph_ids:  int32 [N]  (which graph each node belongs to; 0 for single)
+    targets / target_mask: task supervision (node class or graph scalar)
+
+so every architecture runs every assigned shape unchanged.  Message
+passing is the gather→MLP→segment-reduce primitive — the learned
+generalisation of the paper's ITA push (DESIGN.md §4), sharing
+`repro.sparse.segment_ops` and the dst-sorted-edge convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...launch.sharding import constrain
+from ...sparse.segment_ops import segment_mean, segment_sum
+from ..layers import cross_entropy_loss, layernorm, layernorm_init, mlp, mlp_init
+
+__all__ = ["GraphBatch", "gather_scatter", "make_node_cls_loss", "GNN_REGISTRY",
+           "register_gnn"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    nodes: jnp.ndarray        # [N, d_feat] float
+    src: jnp.ndarray          # [E] int32
+    dst: jnp.ndarray          # [E] int32
+    edge_feats: jnp.ndarray   # [E, d_edge] float ([E, 0] if unused)
+    node_mask: jnp.ndarray    # [N] bool
+    edge_mask: jnp.ndarray    # [E] bool
+    graph_ids: jnp.ndarray    # [N] int32
+    targets: jnp.ndarray      # [N] int32 (node cls) or [G] float (graph reg)
+    target_mask: jnp.ndarray  # [N] or [G] bool
+    pos: jnp.ndarray          # [N, 3] float (SchNet-style geometry; zeros ok)
+    n_graphs: int = dataclasses.field(metadata=dict(static=True))
+
+
+def gather_scatter(h_src, h_dst, e, src, dst, edge_mask, n_nodes: int,
+                   msg_fn, agg: str = "sum"):
+    """The message-passing primitive: m_ij = msg(h_i, h_j, e_ij) → agg by dst."""
+    m = msg_fn(h_src[src], h_dst[dst], e)
+    m = jnp.where(edge_mask[:, None], m, 0)
+    if agg == "sum":
+        return segment_sum(m, dst, n_nodes, sorted=False)
+    if agg == "mean":
+        return segment_mean(m, dst, n_nodes, sorted=False)
+    raise ValueError(agg)
+
+
+def make_node_cls_loss(logits: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    """Masked node-classification CE (full-batch + sampled cells)."""
+    mask = batch.target_mask.astype(jnp.float32)
+    return cross_entropy_loss(logits, batch.targets, mask=mask)
+
+
+def graph_readout(h: jnp.ndarray, batch: GraphBatch, mode: str = "sum") -> jnp.ndarray:
+    hm = jnp.where(batch.node_mask[:, None], h, 0)
+    if mode == "sum":
+        return segment_sum(hm, batch.graph_ids, batch.n_graphs, sorted=True)
+    if mode == "mean":
+        return segment_mean(hm, batch.graph_ids, batch.n_graphs, sorted=True)
+    raise ValueError(mode)
+
+
+# registry: arch name -> (init_fn(key, cfg, d_feat, n_classes), loss_fn(params, batch, cfg))
+GNN_REGISTRY: dict[str, tuple] = {}
+
+
+def register_gnn(name: str):
+    def deco(pair):
+        GNN_REGISTRY[name] = pair
+        return pair
+    return deco

@@ -1,0 +1,73 @@
+"""GIN (Xu et al., arXiv:1810.00826).  Assigned config: 5 layers, d=64, sum
+aggregator, learnable epsilon.  BatchNorm → LayerNorm adaptation (batch
+stats are a cross-device sync point at 512 chips; LN is the standard
+TPU-friendly substitute, noted in DESIGN.md).
+Graph-level cells use the paper's jumping-knowledge sum readout.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ...sparse.segment_ops import segment_sum
+from ..layers import dense, dense_init, mlp, mlp_init
+from .common import GraphBatch, graph_readout, make_node_cls_loss, register_gnn
+
+__all__ = ["GINConfig", "gin_init", "gin_forward", "gin_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    n_layers: int = 5
+    d_hidden: int = 64
+    aggregator: str = "sum"
+    learnable_eps: bool = True
+    dtype: object = jnp.float32
+
+
+def gin_init(key, cfg: GINConfig, d_feat: int, d_edge: int, n_out: int) -> dict:
+    d = cfg.d_hidden
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    params = {
+        "embed": dense_init(keys[0], d_feat, d, bias=True, dtype=cfg.dtype),
+        "layers": [],
+        "head": dense_init(keys[1], d * (cfg.n_layers + 1), n_out, bias=True,
+                           dtype=cfg.dtype),
+    }
+    for i in range(cfg.n_layers):
+        params["layers"].append({
+            "mlp": mlp_init(keys[2 + i], [d, d, d], dtype=cfg.dtype,
+                            final_layernorm=True),
+            "eps": jnp.zeros((), cfg.dtype),
+        })
+    return params
+
+
+def gin_forward(params, batch: GraphBatch, cfg: GINConfig) -> jnp.ndarray:
+    N = batch.nodes.shape[0]
+    h = dense(params["embed"], batch.nodes)
+    reps = [h]
+    for lp in params["layers"]:
+        msg = jnp.where(batch.edge_mask[:, None], h[batch.src], 0)
+        agg = segment_sum(msg, batch.dst, N, sorted=False)
+        h = mlp(lp["mlp"], (1.0 + lp["eps"]) * h + agg)
+        reps.append(h)
+    return jnp.concatenate(reps, axis=-1)  # jumping knowledge concat
+
+
+def gin_loss(params, batch: GraphBatch, cfg: GINConfig):
+    rep = gin_forward(params, batch, cfg)
+    if batch.n_graphs > 1:
+        g = graph_readout(rep, batch, "sum")
+        pred = dense(params["head"], g)[:, 0]
+        err = jnp.where(batch.target_mask, pred - batch.targets, 0)
+        loss = jnp.sum(err ** 2) / jnp.maximum(jnp.sum(batch.target_mask), 1)
+        return loss, {"mse": loss}
+    logits = dense(params["head"], rep)
+    loss = make_node_cls_loss(logits, batch)
+    return loss, {"ce": loss}
+
+
+register_gnn("gin-tu")((gin_init, gin_forward, gin_loss, GINConfig))

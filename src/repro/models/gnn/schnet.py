@@ -1,0 +1,101 @@
+"""SchNet (Schütt et al., arXiv:1706.08566): continuous-filter convolutions.
+
+Assigned config: 3 interaction blocks, d_hidden=64, 300 RBF centers,
+cutoff 10 Å.  Adaptation for non-molecular assigned shapes (cora/products):
+node features enter through a linear embed instead of the atomic-number
+lookup, and geometry comes from the per-node ``pos`` channel of
+GraphBatch (synthetic for web graphs) — the triplet-free cfconv kernel
+regime is preserved (kernel_taxonomy §GNN: SchNet = RBF + gather + scatter).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ...sparse.segment_ops import segment_sum
+from ..layers import dense, dense_init, mlp, mlp_init
+from .common import GraphBatch, graph_readout, make_node_cls_loss, register_gnn
+
+__all__ = ["SchNetConfig", "schnet_init", "schnet_forward", "schnet_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    dtype: object = jnp.float32
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def rbf_expand(dist: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """Gaussian radial basis on [0, cutoff], gamma from center spacing."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 1.0 / (centers[1] - centers[0]) ** 2
+    return jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2)
+
+
+def schnet_init(key, cfg: SchNetConfig, d_feat: int, d_edge: int, n_out: int) -> dict:
+    d = cfg.d_hidden
+    keys = jax.random.split(key, 2 + 4 * cfg.n_interactions)
+    params = {
+        "embed": dense_init(keys[0], d_feat, d, dtype=cfg.dtype),
+        "out_mlp": mlp_init(keys[1], [d, d // 2, n_out], dtype=cfg.dtype),
+        "interactions": [],
+    }
+    for i in range(cfg.n_interactions):
+        k0, k1, k2, k3 = jax.random.split(keys[2 + i], 4)
+        params["interactions"].append({
+            "w1": dense_init(k0, d, d, dtype=cfg.dtype),
+            "filter": mlp_init(k1, [cfg.n_rbf, d, d], dtype=cfg.dtype),
+            "w2": dense_init(k2, d, d, bias=True, dtype=cfg.dtype),
+            "w3": dense_init(k3, d, d, bias=True, dtype=cfg.dtype),
+        })
+    return params
+
+
+def schnet_forward(params, batch: GraphBatch, cfg: SchNetConfig) -> jnp.ndarray:
+    N = batch.nodes.shape[0]
+    h = dense(params["embed"], batch.nodes)
+    dist = jnp.linalg.norm(batch.pos[batch.src] - batch.pos[batch.dst], axis=-1)
+
+    from ...launch.sharding import constrain
+
+    def interaction(h, blk):
+        # RBF + envelope are recomputed inside the checkpointed block: the
+        # [E, 300] basis is ~74 GB f32 at the ogb_products cell — cheap to
+        # rebuild from [E] distances, ruinous to keep live per block.
+        rbf = rbf_expand(dist, cfg.n_rbf, cfg.cutoff)
+        rbf = constrain(rbf, "edges", "embed")
+        env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+        w = mlp(blk["filter"], rbf, act=shifted_softplus) * env[:, None]
+        w = constrain(w, "edges", "embed")
+        msg = dense(blk["w1"], h)[batch.src] * w
+        msg = jnp.where(batch.edge_mask[:, None], msg, 0)
+        agg = segment_sum(msg, batch.dst, N, sorted=False)
+        v = dense(blk["w3"], shifted_softplus(dense(blk["w2"], agg)))
+        return h + v
+
+    for blk in params["interactions"]:
+        h = jax.checkpoint(interaction)(h, blk)
+    return mlp(params["out_mlp"], h, act=shifted_softplus)
+
+
+def schnet_loss(params, batch: GraphBatch, cfg: SchNetConfig):
+    out = schnet_forward(params, batch, cfg)
+    if batch.n_graphs > 1:  # molecular energy regression (native task)
+        pred = graph_readout(out, batch, "sum")[:, 0]
+        err = jnp.where(batch.target_mask, pred - batch.targets, 0)
+        loss = jnp.sum(err ** 2) / jnp.maximum(jnp.sum(batch.target_mask), 1)
+        return loss, {"mse": loss}
+    loss = make_node_cls_loss(out, batch)
+    return loss, {"ce": loss}
+
+
+register_gnn("schnet")((schnet_init, schnet_forward, schnet_loss, SchNetConfig))

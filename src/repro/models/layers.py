@@ -1,0 +1,185 @@
+"""Shared dense layers — plain-pytree parameters (dicts of jnp arrays).
+
+No flax/haiku in the container, and for a sharding-first framework the
+explicit init/apply split is an advantage anyway: every parameter leaf has
+a deterministic path, which is what the sharding-rule engine
+(`repro.launch.sharding`) pattern-matches on.
+
+Conventions:
+  * init_* functions take (key, ...) and return a pytree of ``dtype`` params
+  * apply functions are pure: (params, inputs) -> outputs
+  * matmul weights are stored [fan_in, fan_out]
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm", "layernorm_init",
+    "layernorm", "mlp_init", "mlp", "rope_freqs", "apply_rope",
+    "ffn_init", "ffn_apply", "cross_entropy_loss",
+]
+
+
+# ---------------------------------------------------------------------------
+# linear / norms
+# ---------------------------------------------------------------------------
+def dense_init(key, fan_in: int, fan_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None) -> dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    p = {"w": (jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((fan_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+@jax.custom_vjp
+def _rmsnorm_core(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * scale
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    return _rmsnorm_core(x, scale, eps), (x, scale, eps)
+
+
+def _rmsnorm_bwd(res, dy):
+    # hand-written backward: all f32 math is internal and dx is emitted in
+    # x.dtype — autodiff's version leaks f32 [B, T, d] cotangents into the
+    # residual stream, doubling the TP psum volume of every backward
+    # dot_general (1.6 GB f32 all-reduces per layer at granite-34b scale).
+    x, scale, eps = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32) * scale.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = xf * inv
+    dx = inv * (dyf - xhat * jnp.mean(dyf * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum((dy.astype(jnp.float32)) * xhat,
+                     axis=tuple(range(dy.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype), None
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # statistics in f32; the normalised value is cast back BEFORE the scale
+    # multiply so no [B, T, d] f32 intermediate survives into the backward
+    # (GSPMD was all-gathering that tensor across the batch axes in the
+    # rematted scale-grad reduction — 8.6 GB/device at the olmoe 2-pod cell).
+    return _rmsnorm_core(x, p["scale"], eps)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# generic MLP (GNN building block)
+# ---------------------------------------------------------------------------
+def mlp_init(key, dims: list[int], *, bias: bool = True, dtype=jnp.float32,
+             final_layernorm: bool = False) -> dict:
+    keys = jax.random.split(key, len(dims) - 1)
+    p = {"layers": [dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+                    for i, k in enumerate(keys)]}
+    if final_layernorm:
+        p["ln"] = layernorm_init(dims[-1], dtype)
+    return p
+
+
+def mlp(p: dict, x: jnp.ndarray, act=jax.nn.relu) -> jnp.ndarray:
+    n = len(p["layers"])
+    for i, lp in enumerate(p["layers"]):
+        x = dense(lp, x)
+        if i < n - 1:
+            x = act(x)
+    if "ln" in p:
+        x = layernorm(p["ln"], x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(d_head: int, max_pos: int, theta: float = 10_000.0) -> jnp.ndarray:
+    """[max_pos, d_head//2] complex-phase angles (f32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    pos = jnp.arange(max_pos, dtype=jnp.float32)
+    return jnp.outer(pos, inv)  # [P, d_head/2]
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., T, d_head]; angles: [T, d_head/2] (already position-sliced)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# transformer FFN variants (DESIGN.md §4 config-fidelity notes)
+# ---------------------------------------------------------------------------
+def ffn_init(key, d_model: int, d_ff: int, ffn_type: str, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if ffn_type == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype=dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype=dtype),
+        }
+    if ffn_type in ("gelu", "relu2"):
+        return {
+            "w_up": dense_init(k1, d_model, d_ff, dtype=dtype),
+            "w_down": dense_init(k2, d_ff, d_model, dtype=dtype),
+        }
+    raise ValueError(f"ffn_type {ffn_type!r}")
+
+
+def ffn_apply(p: dict, x: jnp.ndarray, ffn_type: str) -> jnp.ndarray:
+    if ffn_type == "swiglu":
+        return dense(p["w_down"], jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+    if ffn_type == "gelu":
+        return dense(p["w_down"], jax.nn.gelu(dense(p["w_up"], x)))
+    if ffn_type == "relu2":
+        return dense(p["w_down"], jnp.square(jax.nn.relu(dense(p["w_up"], x))))
+    raise ValueError(f"ffn_type {ffn_type!r}")
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE in f32 (logits [..., V], labels int [...])."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)

@@ -1,0 +1,546 @@
+"""Decoder-only transformer LM covering all five assigned LM architectures.
+
+One implementation, config-switched:
+  * GQA with any (n_heads, n_kv_heads) — MQA (granite-34b, kv=1) through
+    MHA (qwen1.5-0.5b / olmoe, kv=heads);
+  * FFN type: swiglu (qwen, granite-moe, olmoe), gelu (granite-34b,
+    GPTBigCode lineage), relu2 (minitron, Nemotron lineage);
+  * optional QKV bias (qwen), tied/untied embeddings;
+  * dense or MoE FFN (granite-moe 40e/top-8, olmoe 64e/top-8).
+
+Structure decisions that matter at 512 chips:
+  * layers are SCANNED over stacked [L, ...] params — HLO size is
+    depth-independent (88-layer granite-34b compiles like a 1-layer model)
+    and remat policy applies per scan step;
+  * attention scores are computed in causal q-chunks (`q_chunk`) so the
+    T×T score matrix never materialises — the jnp analogue of the Pallas
+    flash kernel (which replaces it on real TPU; ops.py dispatch);
+  * residual stream is annotated ("batch", "seq", "embed") → sequence-
+    parallel residuals under the production rules; attention/FFN
+    internals annotate "heads"/"ffn" → tensor-parallel;
+  * the LM head annotates "vocab" → vocab-parallel CE (GSPMD turns the
+    softmax into a psum over the model axis, never materialising the full
+    [B, T, V] logits on one device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import constrain, current_rules
+from .layers import (
+    apply_rope,
+    cross_entropy_loss,
+    dense,
+    dense_init,
+    ffn_apply,
+    ffn_init,
+    rmsnorm,
+    rmsnorm_init,
+    rope_freqs,
+)
+from .moe import MoEConfig, moe_apply, moe_apply_sharded, moe_init
+
+
+def _moe_dispatch(ffn_params, h2d, cfg: LMConfig):
+    """Pick the EP path: shard_map schedule when mesh rules are active
+    (distributed lowering), local sort-dispatch otherwise (single device)."""
+    rules = current_rules()
+    if rules is not None and "model" in rules.mesh.shape:
+        return moe_apply_sharded(ffn_params, h2d, cfg.moe, cfg.ffn_type, rules)
+    return moe_apply(ffn_params, h2d, cfg.moe, cfg.ffn_type)
+
+__all__ = ["LMConfig", "init_lm_params", "lm_loss", "lm_prefill",
+           "lm_decode_step", "init_kv_cache", "count_lm_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    ffn_type: str = "swiglu"
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10_000.0
+    max_seq: int = 32_768
+    dtype: Any = jnp.bfloat16
+    q_chunk: int = 512          # causal-attention query chunk
+    remat: bool = True
+    # Segmented remat: checkpoint every `remat_group` layers — persistent
+    # activation saves shrink L/G x at the cost of one extra group-level
+    # recompute in the backward (needed to fit 88-layer granite-34b in HBM).
+    remat_group: int = 1
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a multiple of 16 so the vocab-parallel
+        shard divides the model axis (granite-moe's 49155 is odd).  Pad ids
+        are simply never emitted by data/labels."""
+        return ((self.vocab + 15) // 16) * 16
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_lm_params(key, cfg: LMConfig) -> dict:
+    """Stacked-layer param pytree.  Leaves under 'layers/' carry [L, ...]."""
+    dt = cfg.dtype
+    L, d, dh = cfg.n_layers, cfg.d_model, cfg.d_head
+    Hq, Hk = cfg.n_heads, cfg.n_kv_heads
+    keys = jax.random.split(key, 12)
+
+    def stacked(k, shape, fan_in):
+        scale = 1.0 / jnp.sqrt(fan_in)
+        return (jax.random.normal(k, (L, *shape), jnp.float32) * scale).astype(dt)
+
+    attn = {
+        "q": {"w": stacked(keys[0], (d, Hq * dh), d)},
+        "k": {"w": stacked(keys[1], (d, Hk * dh), d)},
+        "v": {"w": stacked(keys[2], (d, Hk * dh), d)},
+        "o": {"w": stacked(keys[3], (Hq * dh, d), Hq * dh)},
+    }
+    if cfg.qkv_bias:
+        for nm in ("q", "k", "v"):
+            width = (Hq if nm == "q" else Hk) * dh
+            attn[nm]["b"] = jnp.zeros((L, width), dt)
+
+    if cfg.moe is None:
+        # stack per-layer FFN params
+        def ffn_stacked():
+            p1 = ffn_init(keys[4], d, cfg.d_ff, cfg.ffn_type, dtype=jnp.float32)
+            name_ids = {"w_gate": 0, "w_up": 1, "w_down": 2}  # process-stable
+            out = {}
+            for nm in p1:
+                kk = jax.random.fold_in(keys[4], name_ids[nm])
+                fan_in = d if nm in ("w_gate", "w_up") else cfg.d_ff
+                out[nm] = {"w": stacked(kk, p1[nm]["w"].shape, fan_in)}
+            return out
+        ffn = ffn_stacked()
+    else:
+        E = cfg.moe.n_experts
+        scale_in, scale_ff = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(cfg.d_ff)
+        ffn = {
+            "router": {"w": (jax.random.normal(keys[5], (L, d, E), jnp.float32)
+                             * scale_in).astype(jnp.float32)},
+            "w_up": (jax.random.normal(keys[6], (L, E, d, cfg.d_ff), jnp.float32)
+                     * scale_in).astype(dt),
+            "w_down": (jax.random.normal(keys[7], (L, E, cfg.d_ff, d), jnp.float32)
+                       * scale_ff).astype(dt),
+        }
+        if cfg.ffn_type == "swiglu":
+            ffn["w_gate"] = (jax.random.normal(keys[8], (L, E, d, cfg.d_ff), jnp.float32)
+                             * scale_in).astype(dt)
+
+    params = {
+        "embed": {"w": (jax.random.normal(keys[9], (cfg.padded_vocab, d), jnp.float32)
+                        * 0.02).astype(dt)},
+        "layers": {
+            "ln1": {"scale": jnp.ones((L, d), dt)},
+            "attn": attn,
+            "ln2": {"scale": jnp.ones((L, d), dt)},
+            "ffn": ffn,
+        },
+        "final_norm": rmsnorm_init(d, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": (jax.random.normal(keys[10], (d, cfg.padded_vocab), jnp.float32)
+                                   / jnp.sqrt(d)).astype(dt)}
+    return params
+
+
+def count_lm_params(cfg: LMConfig) -> int:
+    d, dh, L = cfg.d_model, cfg.d_head, cfg.n_layers
+    attn = d * cfg.n_heads * dh * 2 + d * cfg.n_kv_heads * dh * 2
+    if cfg.qkv_bias:
+        attn += (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
+    if cfg.moe is None:
+        n_mats = 3 if cfg.ffn_type == "swiglu" else 2
+        ffn = n_mats * d * cfg.d_ff
+    else:
+        n_mats = 3 if cfg.ffn_type == "swiglu" else 2
+        ffn = cfg.moe.n_experts * n_mats * d * cfg.d_ff + d * cfg.moe.n_experts
+    per_layer = attn + ffn + 2 * d
+    embed = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    return L * per_layer + embed + d
+
+
+def active_lm_params(cfg: LMConfig) -> int:
+    """Active params per token (MoE counts top_k of n_experts)."""
+    if cfg.moe is None:
+        return count_lm_params(cfg)
+    d, dh, L = cfg.d_model, cfg.d_head, cfg.n_layers
+    attn = d * cfg.n_heads * dh * 2 + d * cfg.n_kv_heads * dh * 2
+    n_mats = 3 if cfg.ffn_type == "swiglu" else 2
+    ffn = cfg.moe.top_k * n_mats * d * cfg.d_ff + d * cfg.moe.n_experts
+    embed = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    return L * (attn + ffn + 2 * d) + embed + d
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked causal — the jnp flash analogue)
+# ---------------------------------------------------------------------------
+def _causal_attention(q, k, v, cfg: LMConfig, q_offset=0):
+    """q: [B, T, Hq, dh]; k/v: [B, S, Hk, dh]; causal w.r.t. absolute pos.
+
+    Computed in query chunks of cfg.q_chunk: the [B, H, qc, S] score block
+    is the largest transient — never T×T.
+
+    GQA/MQA layout note: KV is repeated up to the full q-head count and the
+    score einsums keep ONE flat head dim.  The repeated KV is bf16 and
+    head-sharded (each device holds only its local heads' copy), and GSPMD
+    propagates the clean 'heads -> model' sharding through every step of
+    the chain — the (Hk, G) split form instead pushed GSPMD into partial
+    resharding of the f32 probs (3.2 GB all-gathers per chunk on the MQA
+    granite-34b).  On real TPU the Pallas flash kernel replaces this path
+    and never materialises the repeat.
+    """
+    B, T, Hq, dh = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    if Hk != Hq:
+        G = Hq // Hk
+        k = jnp.broadcast_to(k[:, :, :, None], (B, S, Hk, G, dh)).reshape(B, S, Hq, dh)
+        v = jnp.broadcast_to(v[:, :, :, None], (B, S, Hk, G, dh)).reshape(B, S, Hq, dh)
+        k = constrain(k, "batch", "seq_q", "heads", None)
+        v = constrain(v, "batch", "seq_q", "heads", None)
+    qc = min(cfg.q_chunk, T)
+    n_chunks = T // qc if T % qc == 0 else 1
+    if T % qc:
+        qc = T
+    scale = 1.0 / math.sqrt(dh)
+
+    def one_chunk(i, qc_block):
+        q_pos = i * qc + q_offset + jnp.arange(qc)[:, None]
+        mask = q_pos >= jnp.arange(S)[None, :]
+        return _chunk_attn(qc_block, k, v, mask, float(scale))
+
+    if n_chunks <= 1:
+        return one_chunk(0, q)
+    qr = q.reshape(B, n_chunks, qc, Hq, dh).transpose(1, 0, 2, 3, 4)
+    out = jax.lax.map(lambda args: one_chunk(args[0], args[1]),
+                      (jnp.arange(n_chunks), qr))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, T, Hq, dh)
+
+
+def _chunk_attn_impl(qc, k, v, mask, scale):
+    s = jnp.einsum("bqhd,bshd->bhqs", qc, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", p.astype(qc.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(qc.dtype), p
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _chunk_attn(qc, k, v, mask, scale):
+    """One causal attention chunk with a hand-written flash-style backward.
+
+    The f32 score math stays INTERNAL in both directions; the boundary
+    values (o, dq, dk, dv) are emitted in the model dtype.  Autodiff's
+    version leaks the f32 score cotangent into dq and from there into every
+    backward projection dot — turning the per-layer TP psums into f32
+    [B, T, d] all-reduces (2x wire bytes and 2x HBM at granite-34b scale).
+    Scores/probs are recomputed in the backward (nothing but the chunk
+    inputs is saved — jax.checkpoint memory semantics built in).
+    """
+    return _chunk_attn_impl(qc, k, v, mask, scale)[0]
+
+
+def _chunk_attn_fwd(qc, k, v, mask, scale):
+    return _chunk_attn_impl(qc, k, v, mask, scale)[0], (qc, k, v, mask)
+
+
+def _chunk_attn_bwd(scale, res, do):
+    qc, k, v, mask = res
+    _, p = _chunk_attn_impl(qc, k, v, mask, scale)   # recompute (remat)
+    dof = do.astype(jnp.float32)
+    dv = jnp.einsum("bhqs,bqhd->bshd", p.astype(qc.dtype), dof,
+                    preferred_element_type=jnp.float32)
+    dp = jnp.einsum("bqhd,bshd->bhqs", dof, v,
+                    preferred_element_type=jnp.float32)
+    ds = (p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))).astype(qc.dtype)
+    dq = jnp.einsum("bhqs,bshd->bqhd", ds, k,
+                    preferred_element_type=jnp.float32) * scale
+    dk = jnp.einsum("bhqs,bqhd->bshd", ds, qc,
+                    preferred_element_type=jnp.float32) * scale
+    return (dq.astype(qc.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None)
+
+
+_chunk_attn.defvjp(_chunk_attn_fwd, _chunk_attn_bwd)
+
+
+def _attn_apply(lp: dict, x: jnp.ndarray, cfg: LMConfig, angles, kv=None, q_offset=0):
+    """One attention sublayer.  kv: optional (k_cache, v_cache) for decode."""
+    B, T, d = x.shape
+    Hq, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense(lp["q"], x).reshape(B, T, Hq, dh)
+    k = dense(lp["k"], x).reshape(B, T, Hk, dh)
+    v = dense(lp["v"], x).reshape(B, T, Hk, dh)
+    q = constrain(q, "batch", "seq_q", "heads", None)
+    k = constrain(k, "batch", "seq_q", "kv_heads", None)
+    ang = jax.lax.dynamic_slice_in_dim(angles, q_offset, T, 0).reshape(1, T, 1, -1)
+    q = apply_rope(q, ang)
+    k = apply_rope(k, ang)
+    if kv is not None:
+        k_cache, v_cache, pos = kv
+        zero = jnp.zeros((), pos.dtype) if hasattr(pos, "dtype") else 0
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                               (zero, pos, zero, zero))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                               (zero, pos, zero, zero))
+        S = k_cache.shape[1]
+        # decode: mask = positions <= pos (q_offset == pos)
+        o = _decode_attention(q, k_cache, v_cache, pos, cfg)
+        o = o.reshape(B, T, Hq * dh)
+        return dense(lp["o"], o), (k_cache, v_cache)
+    o = _causal_attention(q, k, v, cfg, q_offset=q_offset)
+    o = o.reshape(B, T, Hq * dh)
+    return dense(lp["o"], o), None
+
+
+def _decode_attention(q, k_cache, v_cache, pos, cfg: LMConfig):
+    """q: [B, 1, Hq, dh] vs cache [B, S, Hk, dh]; valid keys are <= pos."""
+    B, T, Hq, dh = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, T, Hk, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(dh)
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype).reshape(B, T, Hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# transformer block + scan
+# ---------------------------------------------------------------------------
+def _block(x, lp, cfg: LMConfig, angles, q_offset=0, kv=None):
+    h = constrain(rmsnorm(lp["ln1"], x), "batch", "seq", "embed")
+    attn_out, kv_new = _attn_apply(lp["attn"], h, cfg, angles, kv=kv, q_offset=q_offset)
+    # constrain the sublayer OUTPUT before the residual add: the o-proj /
+    # down-proj dots contract over the model axis, and the seq-sharded
+    # target layout lets GSPMD fuse psum+slice into reduce-scatter (half
+    # the wire bytes of the all-reduce it otherwise emits in the backward).
+    attn_out = constrain(attn_out, "batch", "seq", "embed")
+    x = x + attn_out
+    x = constrain(x, "batch", "seq", "embed")
+    h = constrain(rmsnorm(lp["ln2"], x), "batch", "seq", "embed")
+    if cfg.moe is None:
+        y = constrain(ffn_apply(lp["ffn"], h, cfg.ffn_type),
+                      "batch", "seq", "embed")
+        aux = {"load_balance": jnp.zeros((), jnp.float32),
+               "router_z": jnp.zeros((), jnp.float32)}
+    else:
+        B, T, d = h.shape
+        y, aux = _moe_dispatch(lp["ffn"], h.reshape(B * T, d), cfg)
+        y = constrain(y.reshape(B, T, d), "batch", "seq", "embed")
+    x = x + y
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux, kv_new
+
+
+def _scan_blocks(params, x, cfg: LMConfig, angles, q_offset=0, caches=None):
+    """lax.scan over stacked layer params.  caches: optional (k, v) [L,...].
+
+    With ``remat_group = G > 1`` the scan runs over L/G layer groups, each
+    group checkpointed as a unit (inner per-layer checkpoints bound the
+    transient): persistent saves are L/G block inputs instead of L.
+    """
+    lp_stack = params["layers"]
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        if caches is None:
+            lp = xs
+            kv = None
+        else:
+            lp, kc, vc = xs
+            kv = (kc, vc, q_offset)
+        blk = _block
+        if cfg.remat:
+            blk = jax.checkpoint(_block, static_argnums=(2,))
+        x, aux, kv_new = blk(x, lp, cfg, angles, q_offset, kv)
+        aux_acc = jax.tree_util.tree_map(jnp.add, aux_acc, aux)
+        y = (kv_new if kv_new is not None else jnp.zeros((), x.dtype))
+        return (x, aux_acc), y
+
+    aux0 = {"load_balance": jnp.zeros((), jnp.float32),
+            "router_z": jnp.zeros((), jnp.float32)}
+
+    G = cfg.remat_group
+    if caches is None and cfg.remat and G > 1 and cfg.n_layers % G == 0:
+        n_groups = cfg.n_layers // G
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, G, *a.shape[1:]), lp_stack)
+
+        def group_body(carry, lp_group):
+            (x, aux), _ = jax.lax.scan(body, carry, lp_group)
+            return (x, aux), jnp.zeros((), carry[0].dtype)
+
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(group_body), (x, aux0), grouped)
+        return x, aux, None
+
+    xs = lp_stack if caches is None else (lp_stack, caches[0], caches[1])
+    (x, aux), ys = jax.lax.scan(body, (x, aux0), xs)
+    new_caches = ys if caches is not None else None
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def _chunked_ce(x, labels, head, cfg: LMConfig) -> jnp.ndarray:
+    """CE over seq chunks: the [B, T, V] logits tensor never materialises.
+
+    Each chunk's logits ([B, ck, V_shard] under vocab-parallel sharding) are
+    recomputed in the backward (checkpoint), so peak logits memory is one
+    chunk — the same trick as the chunked attention, applied to the LM head.
+    """
+    B, T, d = x.shape
+    ck = min(cfg.q_chunk, T)
+    if T % ck:
+        ck = T
+    n = T // ck
+
+    # tied head = embed.T arrives (data, model)-sharded on (d, V); force the
+    # d dim unsharded here or GSPMD reshards x onto the contraction dim and
+    # all-gathers the full [B, T, d] batch (8.6 GB/device at olmoe 2-pod).
+    head = constrain(head, None, "vocab")
+
+    def chunk(args):
+        xc, lc = args  # [B, ck, d], [B, ck]
+        logits = xc @ head
+        # vocab-parallel: "seq" and "vocab" both map to the model axis, so
+        # seq stays unsharded here and GSPMD psums the logsumexp over vocab.
+        logits = constrain(logits, "batch", None, "vocab").astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    if n <= 1:
+        return chunk((x, labels)) / (B * T)
+    xr = x.reshape(B, n, ck, d).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, n, ck).transpose(1, 0, 2)
+    nll = jax.lax.map(jax.checkpoint(chunk), (xr, lr))
+    return jnp.sum(nll) / (B * T)
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    """batch = {tokens [B, T] int32, labels [B, T] int32} -> scalar loss."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", "embed")
+    angles = rope_freqs(cfg.d_head, tokens.shape[1], cfg.rope_theta)
+    x, aux, _ = _scan_blocks(params, x, cfg, angles)
+    x = rmsnorm(params["final_norm"], x)
+    head = params["lm_head"]["w"] if "lm_head" in params else params["embed"]["w"].T
+    loss = _chunked_ce(x, labels, head, cfg)
+    total = loss + aux["load_balance"] + aux["router_z"]
+    return total, {"ce": loss, **aux}
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def lm_prefill(params, tokens, cfg: LMConfig):
+    """Prefill: [B, T] -> (last-position logits [B, V], kv caches [L, ...]).
+
+    Builds the cache by running the train-path attention and emitting K/V
+    per layer (scan ys), then returns logits at the last position.
+    """
+    B, T = tokens.shape
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", "embed")
+    angles = rope_freqs(cfg.d_head, T, cfg.rope_theta)
+
+    def body(x, lp):
+        h = rmsnorm(lp["ln1"], x)
+        Hq, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = dense(lp["attn"]["q"], h).reshape(B, T, Hq, dh)
+        k = dense(lp["attn"]["k"], h).reshape(B, T, Hk, dh)
+        v = dense(lp["attn"]["v"], h).reshape(B, T, Hk, dh)
+        ang = angles.reshape(1, T, 1, -1)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+        o = _causal_attention(q, k, v, cfg)
+        x = x + dense(lp["attn"]["o"], o.reshape(B, T, Hq * dh))
+        x = constrain(x, "batch", "seq", "embed")
+        h = rmsnorm(lp["ln2"], x)
+        if cfg.moe is None:
+            y = ffn_apply(lp["ffn"], h, cfg.ffn_type)
+        else:
+            y, _ = _moe_dispatch(lp["ffn"], h.reshape(B * T, -1), cfg)
+            y = y.reshape(B, T, -1)
+        x = constrain(x + y, "batch", "seq", "embed")
+        return x, (k, v)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, kvs = jax.lax.scan(body_fn, x, params["layers"])
+    x = rmsnorm(params["final_norm"], x[:, -1:, :])
+    head = params["lm_head"]["w"] if "lm_head" in params else params["embed"]["w"].T
+    logits = (x @ head)[:, 0, :]
+    return constrain(logits, "batch", "vocab"), kvs
+
+
+def lm_decode_step(params, caches, token, pos, cfg: LMConfig):
+    """One decode step: token [B] int32, pos scalar int32.
+
+    caches: (k [L, B, S, Hk, dh], v [...]) — updated functionally.
+    Returns (logits [B, V], new caches).
+    """
+    B = token.shape[0]
+    x = jnp.take(params["embed"]["w"], token[:, None], axis=0)  # [B, 1, d]
+    x = constrain(x, "batch", None, "embed")
+    angles = rope_freqs(cfg.d_head, cfg.max_seq, cfg.rope_theta)
+    ang = jax.lax.dynamic_slice_in_dim(angles, pos, 1, axis=0).reshape(1, 1, 1, -1)
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        h = rmsnorm(lp["ln1"], x)
+        Hq, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = dense(lp["attn"]["q"], h).reshape(B, 1, Hq, dh)
+        k = dense(lp["attn"]["k"], h).reshape(B, 1, Hk, dh)
+        v = dense(lp["attn"]["v"], h).reshape(B, 1, Hk, dh)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+        zero = jnp.zeros((), pos.dtype) if hasattr(pos, "dtype") else 0
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (zero, pos, zero, zero))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (zero, pos, zero, zero))
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads", None)
+        o = _decode_attention(q, kc, vc, pos, cfg)
+        x = x + dense(lp["attn"]["o"], o.reshape(B, 1, Hq * dh))
+        h = rmsnorm(lp["ln2"], x)
+        if cfg.moe is None:
+            y = ffn_apply(lp["ffn"], h, cfg.ffn_type)
+        else:
+            y, _ = _moe_dispatch(lp["ffn"], h.reshape(B, -1), cfg)
+            y = y.reshape(B, 1, -1)
+        return x + y, (kc, vc)
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches[0], caches[1]))
+    x = rmsnorm(params["final_norm"], x)
+    head = params["lm_head"]["w"] if "lm_head" in params else params["embed"]["w"].T
+    logits = (x @ head)[:, 0, :]
+    return constrain(logits, "batch", "vocab"), new_caches

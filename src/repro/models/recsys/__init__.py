@@ -1,0 +1,11 @@
+from .xdeepfm import (
+    CRITEO_VOCABS,
+    XDeepFMConfig,
+    xdeepfm_forward,
+    xdeepfm_init,
+    xdeepfm_loss,
+    xdeepfm_score_candidates,
+)
+
+__all__ = ["CRITEO_VOCABS", "XDeepFMConfig", "xdeepfm_forward", "xdeepfm_init",
+           "xdeepfm_loss", "xdeepfm_score_candidates"]

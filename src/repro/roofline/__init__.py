@@ -1,0 +1,7 @@
+"""Roofline analysis: hardware constants, HLO cost parsing, reporting."""
+from .analysis import RooflineReport, analyze_compiled
+from .hlo_costs import HloCosts, parse_hlo_costs
+from .hw import HW, TPUv5e
+
+__all__ = ["HW", "HloCosts", "RooflineReport", "TPUv5e", "analyze_compiled",
+           "parse_hlo_costs"]

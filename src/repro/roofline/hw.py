@@ -1,0 +1,26 @@
+"""TPU v5e hardware constants (the dry-run's roofline denominators)."""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["TPUv5e", "HW"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUChip:
+    name: str
+    peak_bf16_flops: float     # FLOP/s per chip
+    hbm_bandwidth: float       # bytes/s per chip
+    ici_link_bandwidth: float  # bytes/s per link
+    hbm_bytes: float
+
+
+TPUv5e = TPUChip(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    hbm_bytes=16e9,
+)
+
+HW = TPUv5e

@@ -1,0 +1,95 @@
+"""Analytic MODEL_FLOPS per (arch × cell) for the useful-compute ratio.
+
+LM: 6·N_active·D_tokens (train), 2·N_active·D (prefill/decode) — the spec
+formula.  GNN / recsys: counted from the architecture's matmul structure
+(messages × MLP widths; CIN einsums), ×3 for train steps (fwd + bwd ≈ 2×).
+These are *useful* model flops — remat recompute and layout overhead are
+intentionally excluded, which is exactly what the ratio exposes.
+"""
+from __future__ import annotations
+
+__all__ = ["model_flops_for"]
+
+
+def _mlp_flops(dims: list[int]) -> float:
+    return sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def _round_up(x, k=512):
+    return ((x + k - 1) // k) * k
+
+
+def _gnn_counts(meta: dict) -> tuple[float, float]:
+    if "batch" in meta:
+        return (_round_up(meta["batch"] * meta["n_nodes"]),
+                _round_up(meta["batch"] * meta["n_edges"]))
+    if "batch_nodes" in meta:
+        from ..graph.sampler import sampled_shapes
+        n, e = sampled_shapes(meta["batch_nodes"], meta["fanout"])
+        return float(_round_up(n)), float(_round_up(e))
+    return float(_round_up(meta["n_nodes"])), float(_round_up(meta["n_edges"]))
+
+
+def model_flops_for(arch: str, cell) -> float | None:
+    from ..configs import get_arch
+
+    spec = get_arch(arch)
+    meta = cell.meta
+
+    if spec.family == "lm":
+        from ..models.lm import active_lm_params
+        cfg = spec.make_config()
+        n_active = active_lm_params(cfg)
+        if cell.kind == "train":
+            return 6.0 * n_active * meta["global_batch"] * meta["seq_len"]
+        if cell.kind == "prefill":
+            return 2.0 * n_active * meta["global_batch"] * meta["seq_len"]
+        if cell.kind == "decode":
+            return 2.0 * n_active * meta["global_batch"]
+        return None
+
+    if spec.family == "gnn":
+        cfg = spec.make_config()
+        N, E = _gnn_counts(meta)
+        d_feat = meta.get("d_feat", 32)
+        n_out = meta.get("n_classes", 1)
+        train_mult = 3.0  # fwd + bwd
+        if arch in ("meshgraphnet", "graphcast"):
+            d = cfg.d_hidden
+            enc = N * _mlp_flops([d_feat, d, d]) + E * _mlp_flops([4, d, d])
+            per_layer = (E * _mlp_flops([3 * d, d, d])
+                         + N * _mlp_flops([2 * d, d, d]))
+            dec = N * _mlp_flops([d, d, n_out])
+            return train_mult * (enc + cfg.n_layers * per_layer + dec)
+        if arch == "schnet":
+            d, rbf = cfg.d_hidden, cfg.n_rbf
+            per_int = (E * (_mlp_flops([rbf, d, d]) + 2 * d)
+                       + N * 2 * d * d * 2 + E * 2 * d)
+            return train_mult * (N * 2 * d_feat * d
+                                 + cfg.n_interactions * per_int
+                                 + N * _mlp_flops([d, d // 2, n_out]))
+        if arch == "gin-tu":
+            d = cfg.d_hidden
+            per_layer = N * _mlp_flops([d, d, d]) + E * d * 2
+            head = N * 2 * d * (cfg.n_layers + 1) * n_out
+            return train_mult * (N * 2 * d_feat * d
+                                 + cfg.n_layers * per_layer + head)
+        return None
+
+    if spec.family == "recsys":
+        cfg = spec.make_config()
+        B = meta["n_candidates"] if cell.kind == "retrieval" else meta["batch"]
+        F, D = cfg.n_fields, cfg.embed_dim
+        cin = 0.0
+        h_prev = F
+        for h in cfg.cin_layers:
+            cin += B * 2.0 * h_prev * F * D * h  # bmd,mh->bhd over m=h_prev*F
+            h_prev = h
+        mlp_dims = [F * D, *cfg.mlp_dims, 1]
+        dnn = B * _mlp_flops(mlp_dims)
+        fwd = cin + dnn + B * F * D  # + embedding adds
+        return (3.0 * fwd) if cell.kind == "train" else fwd
+
+    if spec.family == "pagerank":
+        return 2.0 * meta["m"]
+    return None

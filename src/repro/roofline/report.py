@@ -1,0 +1,91 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from results JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+__all__ = ["load_records", "dryrun_table", "roofline_table"]
+
+
+def load_records(out_dir: str | pathlib.Path) -> list[dict]:
+    recs = []
+    for f in sorted(pathlib.Path(out_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def _fmt_b(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1e9:
+        return f"{x/1e9:.2f}GB"
+    if x >= 1e6:
+        return f"{x/1e6:.1f}MB"
+    return f"{x:.0f}B"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | status | mem/dev | HLO flops/dev | coll bytes/dev | lower+compile |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{_fmt_b(r['memory']['bytes_per_device'])} | "
+                f"{rf['hlo_flops']:.2e} | {_fmt_b(rf['collective_bytes'])} | "
+                f"{r['lower_s']}+{r['compile_s']}s |")
+        elif r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - | - | - |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict], mesh_filter: str = "data=16xmodel=16") -> str:
+    lines = ["| arch × shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh_filter:
+            continue
+        rf = r["roofline"]
+        mf = f"{rf['model_flops']:.2e}" if rf.get("model_flops") else "-"
+        uf = f"{rf['useful_ratio']:.2f}" if rf.get("useful_ratio") else "-"
+        lines.append(
+            f"| {r['arch']}:{r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"**{rf['dominant']}** | {mf} | {uf} |")
+    return "\n".join(lines)
+
+
+def summary(recs: list[dict]) -> str:
+    ok = sum(r["status"] == "ok" for r in recs)
+    sk = sum(r["status"] == "skipped" for r in recs)
+    er = sum(r["status"] == "error" for r in recs)
+    over = [(r["arch"], r["shape"], r["mesh"],
+             round(r["memory"]["bytes_per_device"] / 1e9, 1))
+            for r in recs if r["status"] == "ok"
+            and r["memory"]["bytes_per_device"] > 16e9]
+    out = [f"{ok} ok / {sk} skipped / {er} failed; >16GB HBM: {len(over)}"]
+    for o in over:
+        out.append(f"  over: {o}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load_records(d)
+    print(summary(recs))
+    print()
+    print("## Dry-run table")
+    print(dryrun_table(recs))
+    print()
+    print("## Roofline (single-pod)")
+    print(roofline_table(recs))
+    print()
+    print("## Roofline (multi-pod)")
+    print(roofline_table(recs, mesh_filter="pod=2xdata=16xmodel=16"))

@@ -1,0 +1,17 @@
+"""Sparse substrate: segment ops, embedding bag, bucketed-ELL layout."""
+from .ell import ELLBucket, ELLGraph, ell_from_graph, spmv_ell_ref
+from .segment_ops import (
+    embedding_bag,
+    scatter_concat_stats,
+    segment_max,
+    segment_mean,
+    segment_min,
+    segment_softmax,
+    segment_sum,
+)
+
+__all__ = [
+    "ELLBucket", "ELLGraph", "ell_from_graph", "embedding_bag",
+    "scatter_concat_stats", "segment_max", "segment_mean", "segment_min",
+    "segment_softmax", "segment_sum", "spmv_ell_ref",
+]

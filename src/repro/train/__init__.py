@@ -1,0 +1,22 @@
+"""Training substrate: optimizers, data, checkpointing, loop."""
+from .checkpoint import CheckpointManager, restore_pytree, save_pytree
+from .data import RecsysStream, TokenStream
+from .optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    decompress_and_accumulate,
+    sgd_init,
+    sgd_update,
+    warmup_cosine,
+)
+from .train_loop import fit
+
+__all__ = [
+    "AdamWConfig", "CheckpointManager", "RecsysStream", "TokenStream",
+    "adamw_init", "adamw_update", "clip_by_global_norm", "compress_grads",
+    "decompress_and_accumulate", "fit", "restore_pytree", "save_pytree",
+    "sgd_init", "sgd_update", "warmup_cosine",
+]

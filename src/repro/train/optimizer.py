@@ -1,0 +1,163 @@
+"""Optimizers — hand-rolled pytree transforms (optax is not in the container).
+
+AdamW keeps a float32 master copy + f32 moments regardless of param dtype
+(mixed-precision training posture: bf16 params on the forward path, f32
+update math).  All state leaves mirror the param tree, so the same FSDP
+sharding rules apply to optimizer state — that is what the dry-run's
+memory_analysis exercises.
+
+``compress_grads`` implements int8 error-feedback compression for the
+cross-pod gradient all-reduce (DESIGN.md §5, distributed-optimization
+tricks): quantize g/scale to int8, all-reduce in int8-equivalent volume,
+keep the quantization error as carry-over state added to the next step's
+gradient.  1/4 the cross-pod bytes at <1e-3 relative update error
+(test_train.py asserts the error-feedback property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "sgd_init", "sgd_update",
+           "clip_by_global_norm", "warmup_cosine", "compress_grads",
+           "decompress_and_accumulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    keep_master: bool = True   # f32 master copy of bf16 params
+
+
+def adamw_init(params, cfg: AdamWConfig) -> dict:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.keep_master:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr: Optional[jnp.ndarray] = None):
+    """Returns (new_params, new_state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(m, v, g, p_master):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        new_master = p_master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                      + cfg.weight_decay * p_master)
+        return m, v, new_master
+
+    masters = state.get("master") or jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32), params)
+    flat = jax.tree_util.tree_map(upd, state["m"], state["v"], grads, masters)
+    m_new = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    master_new = jax.tree_util.tree_map(lambda x: x[2], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    params_new = jax.tree_util.tree_map(
+        lambda mp, p: mp.astype(p.dtype), master_new, params)
+    new_state = {"m": m_new, "v": v_new, "step": step}
+    if "master" in state:
+        new_state["master"] = master_new
+    return params_new, new_state, {"grad_norm": gnorm, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# SGD (GNN / recsys default)
+# ---------------------------------------------------------------------------
+def sgd_init(params, momentum: float = 0.9) -> dict:
+    return {"mu": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                         params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params, grads, state, lr: float = 1e-2, momentum: float = 0.9):
+    def upd(mu, g, p):
+        mu = momentum * mu + g.astype(jnp.float32)
+        return mu, (p.astype(jnp.float32) - lr * mu).astype(p.dtype)
+
+    pairs = jax.tree_util.tree_map(upd, state["mu"], grads, params)
+    mu_new = jax.tree_util.tree_map(lambda x: x[0], pairs,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    p_new = jax.tree_util.tree_map(lambda x: x[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, {"mu": mu_new, "step": state["step"] + 1}, {}
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / max(warmup, 1)
+    frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(t < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod all-reduce volume /4)
+# ---------------------------------------------------------------------------
+def compress_grads(grads, error_state=None):
+    """g -> (int8 q, f32 per-leaf scale, new error_state).
+
+    error-feedback: the residual (g - dequant(q)) is carried and added to
+    the next step's gradient, so compression noise does not bias the
+    optimizer (Seide et al.; Karimireddy et al. 2019).
+    """
+    if error_state is None:
+        error_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def comp(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    triples = jax.tree_util.tree_map(comp, grads, error_state)
+    q = jax.tree_util.tree_map(lambda x: x[0], triples,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree_util.tree_map(lambda x: x[1], triples,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    e = jax.tree_util.tree_map(lambda x: x[2], triples,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, e
+
+
+def decompress_and_accumulate(q, scale):
+    return jax.tree_util.tree_map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss, q, scale)

@@ -1,0 +1,87 @@
+"""Generic fault-tolerant training loop.
+
+One loop serves every family (LM / GNN / recsys): the caller supplies a
+jitted ``train_step(params, opt_state, batch) -> (params, opt_state,
+metrics)`` plus a data stream with ``batch_at(step)``.  The loop owns:
+
+  * checkpoint/restart (atomic, resumable mid-stream — the data cursor is
+    the step number, so restore is bit-exact);
+  * failure injection (``crash_at_step``) used by the kill/restart test;
+  * straggler/elastic posture: batches are pure functions of (seed, step),
+    so reassigning shards needs no data re-coordination (train/data.py);
+  * lightweight metric logging (host-side, jsonl).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from .checkpoint import CheckpointManager
+
+__all__ = ["fit"]
+
+
+def fit(
+    *,
+    train_step: Callable,
+    params,
+    opt_state,
+    stream,
+    steps: int,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    log_every: int = 10,
+    log_path: Optional[str] = None,
+    crash_at_step: Optional[int] = None,
+    device_put_fn: Optional[Callable] = None,
+) -> dict:
+    """Run ``steps`` steps, resuming from the latest checkpoint if present.
+
+    Returns {params, opt_state, history, start_step}.
+    """
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if mgr is not None:
+        latest = mgr.latest_step()
+        if latest is not None:
+            state_like = {"params": params, "opt": opt_state}
+            restored = mgr.restore(latest, state_like)
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = mgr.meta(latest)["step"]
+
+    history = []
+    logf = open(log_path, "a") if log_path else None
+    t0 = time.perf_counter()
+    for step in range(start_step, steps):
+        batch = stream.batch_at(step)
+        if device_put_fn is not None:
+            batch = device_put_fn(batch)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if crash_at_step is not None and step == crash_at_step:
+            # simulated hard failure AFTER the step ran but BEFORE its
+            # checkpoint: the restart must redo this step identically.
+            raise SystemExit(42)
+        if (step + 1) % ckpt_every == 0 and mgr is not None:
+            mgr.save(step + 1, {"params": params, "opt": opt_state},
+                     meta={"step": step + 1})
+        if (step + 1) % log_every == 0 or step == steps - 1:
+            m = {k: float(np.asarray(jax.device_get(v)))
+                 for k, v in metrics.items()}
+            m["step"] = step + 1
+            m["wall_s"] = round(time.perf_counter() - t0, 3)
+            history.append(m)
+            if logf:
+                logf.write(json.dumps(m) + "\n")
+                logf.flush()
+    if mgr is not None:
+        mgr.save(steps, {"params": params, "opt": opt_state},
+                 meta={"step": steps})
+    if logf:
+        logf.close()
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "start_step": start_step}

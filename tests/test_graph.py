@@ -1,0 +1,102 @@
+"""Graph substrate: construction invariants, generators, CSR round-trip."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph import (
+    Graph,
+    csr_from_graph,
+    erdos_renyi,
+    graph_from_edges,
+    paper_dataset,
+    random_dag,
+    validate_graph,
+    web_graph,
+)
+
+
+def test_graph_from_edges_basic():
+    src = np.array([0, 1, 2, 2, 3])
+    dst = np.array([1, 2, 0, 3, 3])  # includes self-loop 3->3
+    g = graph_from_edges(src, dst, 5)
+    validate_graph(g)
+    assert g.n == 5 and g.m == 5
+    assert np.asarray(g.out_deg).tolist() == [1, 1, 2, 1, 0]
+    assert np.asarray(g.in_deg).tolist() == [1, 1, 1, 2, 0]
+    assert bool(g.dangling_mask[4]) and not bool(g.dangling_mask[0])
+    assert bool(g.unreferenced_mask[4])
+
+
+def test_dedup_and_sorting():
+    src = np.array([1, 1, 0, 0])
+    dst = np.array([0, 0, 1, 1])
+    g = graph_from_edges(src, dst, 2)
+    assert g.m == 2
+    validate_graph(g)
+
+
+def test_out_of_range_rejected():
+    with pytest.raises(ValueError):
+        graph_from_edges(np.array([0, 5]), np.array([1, 1]), 3)
+
+
+@pytest.mark.parametrize("gen,kw", [
+    (web_graph, dict(dangling_frac=0.2)),
+    (erdos_renyi, {}),
+    (random_dag, {}),
+])
+def test_generators_valid(gen, kw):
+    g = gen(500, 3000, seed=7, **kw)
+    validate_graph(g)
+    assert g.n == 500
+    assert 0 < g.m <= 3000
+
+
+def test_web_graph_dangling_fraction():
+    g = web_graph(4000, 30000, dangling_frac=0.25, seed=3)
+    nd = int(np.sum(np.asarray(g.out_deg) == 0))
+    # requested dangling stay dangling; a few extra can appear from dedup
+    assert nd >= int(0.25 * 4000)
+    assert nd <= int(0.30 * 4000)
+
+
+def test_dag_is_acyclic():
+    g = random_dag(300, 2000, seed=11)
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    assert np.all(src < dst)
+
+
+def test_paper_dataset_stats_match_table3():
+    g = paper_dataset("web-Google", scale=0.02, seed=0)
+    s = g.stats()
+    # dangling fraction within 30% of Table 3's 136259/875713 = 0.156
+    target = 136_259 / 875_713
+    assert abs(s["nd"] / s["n"] - target) / target < 0.3
+    validate_graph(g)
+
+
+def test_csr_roundtrip():
+    g = web_graph(200, 1500, seed=5)
+    off, idx = csr_from_graph(g, by="src")
+    assert off[-1] == g.m
+    out_deg = np.diff(off)
+    assert np.array_equal(out_deg, np.asarray(g.out_deg))
+    # every CSR entry is a real edge
+    src_csr = np.repeat(np.arange(g.n), out_deg)
+    edges_csr = set(zip(src_csr.tolist(), idx.tolist()))
+    edges_coo = set(zip(np.asarray(g.src).tolist(), np.asarray(g.dst).tolist()))
+    assert edges_csr == edges_coo
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(10, 300),
+    m_mult=st.integers(1, 8),
+    frac=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_generator_invariants_property(n, m_mult, frac, seed):
+    g = web_graph(n, n * m_mult, dangling_frac=frac, seed=seed)
+    validate_graph(g)
+    assert int(np.sum(np.asarray(g.out_deg))) == g.m

@@ -1,0 +1,161 @@
+"""Per-kernel allclose vs. ref.py oracles — shape/dtype sweeps + hypothesis.
+
+All Pallas kernels run under interpret=True (CPU container; TPU is the
+compile target — see DESIGN.md).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ita, ita_step
+from repro.core.propagate import spmv_p
+from repro.graph import web_graph
+from repro.kernels.flash_attention import (
+    decode_ref,
+    flash_decode,
+    flash_prefill_causal,
+    prefill_causal_ref,
+)
+from repro.kernels.spmv_ell import (
+    ita_step_ell,
+    spmv_ell,
+    spmv_ell_bucket,
+    spmv_ell_bucket_ref,
+)
+from repro.sparse import ell_from_graph, spmv_ell_ref
+
+
+# ---------------------------------------------------------------------------
+# spmv_ell
+# ---------------------------------------------------------------------------
+class TestSpmvEll:
+    @pytest.mark.parametrize("rows,k", [(8, 8), (32, 8), (256, 32), (100, 128), (7, 16)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_bucket_kernel_matches_ref(self, rows, k, dtype):
+        rng = np.random.default_rng(rows * k)
+        n = 500
+        w = jnp.asarray(rng.standard_normal(n + 1), dtype)
+        w = w.at[n].set(0.0)  # sentinel slot
+        idx = jnp.asarray(rng.integers(0, n + 1, size=(rows, k)), jnp.int32)
+        out = spmv_ell_bucket(w, idx, block_rows=64, interpret=True)
+        ref = spmv_ell_bucket_ref(w, idx)
+        tol = 1e-5 if dtype == jnp.float32 else 1e-12
+        np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("widths", [(8, 32, 128), (4, 16, 64), (16,)])
+    def test_full_graph_matches_coo(self, widths):
+        g = web_graph(800, 6500, dangling_frac=0.2, seed=3)
+        ell = ell_from_graph(g, widths=widths)
+        w = jnp.asarray(np.random.default_rng(0).random(g.n))
+        y_coo = jax.ops.segment_sum(w[g.src], g.dst, num_segments=g.n)
+        np.testing.assert_allclose(spmv_ell_ref(ell, w), y_coo, atol=1e-12)
+        np.testing.assert_allclose(spmv_ell(ell, w, interpret=True), y_coo, atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(20, 300), mult=st.integers(1, 8), seed=st.integers(0, 9999))
+    def test_property_random_graphs(self, n, mult, seed):
+        g = web_graph(n, n * mult, dangling_frac=0.15, seed=seed)
+        ell = ell_from_graph(g)
+        w = jnp.asarray(np.random.default_rng(seed).random(n))
+        y_coo = jax.ops.segment_sum(w[g.src], g.dst, num_segments=g.n)
+        np.testing.assert_allclose(spmv_ell(ell, w, interpret=True), y_coo, atol=1e-11)
+
+    def test_ita_step_ell_matches_core(self):
+        g = web_graph(600, 5000, dangling_frac=0.2, seed=4)
+        ell = ell_from_graph(g)
+        h = jnp.ones((g.n,), jnp.float64)
+        pi_bar = jnp.zeros_like(h)
+        inv_deg = g.inv_out_deg(jnp.float64)
+        nd = jnp.logical_not(g.dangling_mask)
+        for _ in range(5):
+            h1, pb1, na1, _ = ita_step(g, h, pi_bar, 0.85, 1e-8, inv_deg, nd)
+            h2, pb2, na2 = ita_step_ell(ell, h, pi_bar, 0.85, 1e-8, inv_deg, nd,
+                                        interpret=True)
+            np.testing.assert_allclose(h2, h1, atol=1e-13)
+            np.testing.assert_allclose(pb2, pb1, atol=1e-13)
+            assert int(na1) == int(na2)
+            h, pi_bar = h1, pb1
+
+    def test_fill_ratio_bounded_on_powerlaw(self):
+        g = web_graph(5000, 40000, dangling_frac=0.15, seed=5)
+        ell = ell_from_graph(g, widths=(4, 8, 32, 128))
+        stats = ell.fill_stats()
+        assert stats["fill_ratio"] < 2.5, stats
+        assert stats["overflow_edges"] < 0.25 * g.m, stats
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Hq,Hk,S,D,bs", [
+        (1, 4, 4, 256, 64, 128),    # MHA
+        (2, 8, 2, 512, 64, 256),    # GQA 4:1
+        (1, 8, 1, 512, 128, 128),   # MQA (granite-34b pattern)
+        (2, 16, 16, 128, 64, 128),  # qwen-ish MHA
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_decode_matches_ref(self, B, Hq, Hk, S, D, bs, dtype):
+        rng = np.random.default_rng(B * Hq + S)
+        q = jnp.asarray(rng.standard_normal((B, Hq, D)), dtype)
+        k = jnp.asarray(rng.standard_normal((B, Hk, S, D)), dtype)
+        v = jnp.asarray(rng.standard_normal((B, Hk, S, D)), dtype)
+        out = flash_decode(q, k, v, block_s=bs, interpret=True)
+        ref = decode_ref(q, k, v)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("B,Hq,Hk,T,D,bq,bs", [
+        (1, 4, 4, 256, 64, 64, 64),
+        (2, 8, 2, 256, 64, 128, 64),
+        (1, 4, 1, 512, 128, 128, 128),
+    ])
+    def test_prefill_causal_matches_ref(self, B, Hq, Hk, T, D, bq, bs):
+        rng = np.random.default_rng(T + D)
+        q = jnp.asarray(rng.standard_normal((B, Hq, T, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, Hk, T, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, Hk, T, D)), jnp.float32)
+        out = flash_prefill_causal(q, k, v, block_q=bq, block_s=bs, interpret=True)
+        ref = prefill_causal_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        """Changing future KV must not change past outputs."""
+        rng = np.random.default_rng(7)
+        B, H, T, D = 1, 2, 128, 64
+        q = jnp.asarray(rng.standard_normal((B, H, T, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, H, T, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, H, T, D)), jnp.float32)
+        o1 = flash_prefill_causal(q, k, v, block_q=64, block_s=64, interpret=True)
+        k2 = k.at[:, :, T // 2:, :].set(0.0)
+        v2 = v.at[:, :, T // 2:, :].set(0.0)
+        o2 = flash_prefill_causal(q, k2, v2, block_q=64, block_s=64, interpret=True)
+        np.testing.assert_allclose(o1[:, :, : T // 2], o2[:, :, : T // 2], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: ITA over the ELL/Pallas path equals the reference solver
+# ---------------------------------------------------------------------------
+def test_ita_ell_end_to_end():
+    from repro.core import power_method
+
+    g = web_graph(700, 5600, dangling_frac=0.2, seed=6)
+    ell = ell_from_graph(g)
+    pi_ref = power_method(g, tol=1e-14, max_iter=500).pi
+
+    h = jnp.ones((g.n,), jnp.float64)
+    pi_bar = jnp.zeros_like(h)
+    inv_deg = g.inv_out_deg(jnp.float64)
+    nd = jnp.logical_not(g.dangling_mask)
+    for _ in range(400):
+        h, pi_bar, n_active = ita_step_ell(ell, h, pi_bar, 0.85, 1e-14, inv_deg, nd,
+                                           interpret=True)
+        if int(n_active) == 0:
+            break
+    pi_bar = pi_bar + h
+    pi = pi_bar / jnp.sum(pi_bar)
+    np.testing.assert_allclose(pi, pi_ref, atol=1e-11)

@@ -1,0 +1,180 @@
+"""The paper's core claims as executable tests.
+
+Central equivalence: ITA(xi→0) == power method == Neumann series (Eq. 7),
+on graphs WITH dangling + unreferenced vertices and self-loops — exactly the
+"special vertices" the paper says need no preprocessing.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    err_max_rel,
+    forward_push,
+    ita,
+    ita_fixed_point,
+    ita_traced,
+    monte_carlo,
+    power_method,
+    reference_pagerank,
+    solve_pagerank,
+)
+from repro.graph import erdos_renyi, graph_from_edges, random_dag, web_graph
+
+
+def _ref(g, c=0.85):
+    return power_method(g, c=c, tol=1e-14, max_iter=500).pi
+
+
+# ---------------------------------------------------------------------------
+# Equivalence of all solvers (the constructive definition is THE definition)
+# ---------------------------------------------------------------------------
+class TestEquivalence:
+    def test_ita_equals_power(self):
+        g = web_graph(1500, 12000, dangling_frac=0.2, seed=2)
+        pi_ref = _ref(g)
+        pi_ita = ita(g, xi=1e-14).pi
+        np.testing.assert_allclose(pi_ita, pi_ref, atol=1e-11)
+
+    def test_neumann_oracle_equals_power(self):
+        g = web_graph(800, 6000, dangling_frac=0.1, seed=3)
+        np.testing.assert_allclose(ita_fixed_point(g, n_terms=250), _ref(g), atol=1e-11)
+
+    def test_forward_push_equals_power(self):
+        g = web_graph(800, 6000, dangling_frac=0.1, seed=4)
+        np.testing.assert_allclose(forward_push(g, xi=1e-15).pi, _ref(g), atol=1e-10)
+
+    def test_monte_carlo_approximates(self):
+        g = web_graph(300, 2500, dangling_frac=0.1, seed=5)
+        pi_mc = monte_carlo(g, walks_per_vertex=400, seed=1).pi
+        # stochastic: L1 error bound scales ~ 1/sqrt(R n)
+        assert float(jnp.sum(jnp.abs(pi_mc - _ref(g)))) < 0.05
+
+    def test_ita_on_dag(self):
+        g = random_dag(600, 4000, seed=6)
+        np.testing.assert_allclose(ita(g, xi=1e-14).pi, _ref(g), atol=1e-11)
+
+    def test_ita_with_self_loops_and_isolated(self):
+        # constructive definition covers self-loops and isolated vertices (§III)
+        src = np.array([0, 1, 2, 2, 4])
+        dst = np.array([1, 0, 2, 1, 4])  # vertex 3 isolated; 2,4 self-loop
+        g = graph_from_edges(src, dst, 5)
+        pi_ref = _ref(g)
+        np.testing.assert_allclose(ita(g, xi=1e-15).pi, pi_ref, atol=1e-11)
+
+    def test_all_dangling_graph(self):
+        # edgeless graph: pi = uniform (everything is dangling)
+        g = graph_from_edges(np.array([], dtype=np.int64), np.array([], dtype=np.int64), 8)
+        pi = ita(g, xi=1e-12).pi
+        np.testing.assert_allclose(pi, np.full(8, 1 / 8), atol=1e-12)
+
+    def test_personalized(self):
+        g = web_graph(500, 4000, dangling_frac=0.15, seed=7)
+        p = np.zeros(500)
+        p[:10] = 0.1  # personalization concentrated on 10 seeds
+        p = jnp.asarray(p)
+        pi_ref = power_method(g, p=p, tol=1e-14, max_iter=500).pi
+        pi_ita = ita(g, p=p, xi=1e-15).pi
+        np.testing.assert_allclose(pi_ita, pi_ref, atol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# PageRank invariants (property-based)
+# ---------------------------------------------------------------------------
+class TestInvariants:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(20, 400), mult=st.integers(2, 10),
+           frac=st.floats(0, 0.4), seed=st.integers(0, 10_000))
+    def test_distribution_properties(self, n, mult, frac, seed):
+        g = web_graph(n, n * mult, dangling_frac=frac, seed=seed)
+        pi = ita(g, xi=1e-12).pi
+        assert abs(float(jnp.sum(pi)) - 1.0) < 1e-10
+        assert float(jnp.min(pi)) > 0  # teleportation keeps everything positive
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(20, 200), mult=st.integers(2, 8), seed=st.integers(0, 10_000))
+    def test_ita_matches_power_property(self, n, mult, seed):
+        g = web_graph(n, n * mult, dangling_frac=0.2, seed=seed)
+        np.testing.assert_allclose(ita(g, xi=1e-13).pi, _ref(g), atol=1e-10)
+
+    def test_permutation_equivariance(self):
+        g = web_graph(300, 2400, dangling_frac=0.15, seed=8)
+        perm = np.random.default_rng(0).permutation(300)
+        src_p = perm[np.asarray(g.src)]
+        dst_p = perm[np.asarray(g.dst)]
+        g_p = graph_from_edges(src_p, dst_p, 300)
+        pi = np.asarray(ita(g, xi=1e-13).pi)
+        pi_p = np.asarray(ita(g_p, xi=1e-13).pi)
+        np.testing.assert_allclose(pi_p[perm], pi, atol=1e-10)
+
+    def test_damping_factor_sweep(self):
+        g = web_graph(200, 1500, dangling_frac=0.1, seed=9)
+        for c in (0.5, 0.85, 0.99):
+            pi_ref = power_method(g, c=c, tol=1e-13, max_iter=3000).pi
+            np.testing.assert_allclose(ita(g, c=c, xi=1e-14, max_iter=30_000).pi,
+                                       pi_ref, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# The paper's special-vertex claims (Thm 1 and §V)
+# ---------------------------------------------------------------------------
+class TestSpecialVertexClaims:
+    def test_dangling_vertices_speed_convergence(self):
+        """Formula 14: more dangling mass → smaller lambda → fewer rounds."""
+        iters = []
+        for frac in (0.0, 0.2, 0.4):
+            g = web_graph(2000, 10000, dangling_frac=frac, seed=10)
+            iters.append(ita(g, xi=1e-10).iterations)
+        assert iters[2] < iters[0], f"dangling should accelerate: {iters}"
+
+    def test_unreferenced_vertices_cut_ops(self):
+        """Formula 15: ops M(T) < m*T because converged vertices exit."""
+        g = web_graph(2000, 10000, dangling_frac=0.2, unref_boost=0.3, seed=11)
+        r = ita_traced(g, xi=1e-10)
+        assert r.ops < g.m * r.iterations
+        # active set shrinks monotonically-ish: final < 60% of initial
+        assert r.active_history[-1] < 0.6 * r.active_history[0]
+
+    def test_active_set_decays_on_dag(self):
+        g = random_dag(1000, 6000, seed=12)
+        r = ita_traced(g, xi=1e-10)
+        assert r.active_history[-1] < r.active_history[0]
+
+    def test_res_linear_in_xi(self):
+        """Formula 18: RES ≈ (1-lambda) xi — log-log slope ≈ 1."""
+        g = web_graph(1000, 8000, dangling_frac=0.15, seed=13)
+        res = []
+        for xi in (1e-6, 1e-8, 1e-10):
+            r = ita_traced(g, xi=xi)
+            res.append(r.residual)
+        slope = (np.log10(res[0]) - np.log10(res[2])) / 4.0  # d log RES / d log xi
+        assert 0.7 < slope < 1.3, f"RES not ~linear in xi: {res}"
+
+    def test_err_bounded_by_xi(self):
+        """Formula 19: err(xi) ≈ xi (relative, vs fully-converged result)."""
+        g = web_graph(1000, 8000, dangling_frac=0.15, seed=14)
+        pi_true = _ref(g)
+        for xi in (1e-6, 1e-8):
+            pi = ita(g, xi=xi).pi
+            err = float(err_max_rel(pi, pi_true))
+            assert err < 50 * xi, f"xi={xi} err={err}"
+
+
+class TestAPI:
+    def test_registry(self):
+        g = erdos_renyi(100, 600, seed=0)
+        for m in ("ita", "power", "forward_push"):
+            r = solve_pagerank(g, method=m)
+            assert abs(float(jnp.sum(r.pi)) - 1) < 1e-8
+
+    def test_unknown_method(self):
+        g = erdos_renyi(10, 30, seed=0)
+        with pytest.raises(KeyError):
+            solve_pagerank(g, method="nope")
+
+    def test_reference_pagerank(self):
+        g = erdos_renyi(100, 600, seed=0)
+        pi = reference_pagerank(g)
+        assert abs(float(jnp.sum(pi)) - 1) < 1e-12

@@ -1,0 +1,179 @@
+"""Training substrate: optimizer math, checkpoint atomicity + kill/restart,
+data determinism, gradient compression error-feedback."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import (
+    AdamWConfig,
+    CheckpointManager,
+    TokenStream,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    decompress_and_accumulate,
+    sgd_init,
+    sgd_update,
+    warmup_cosine,
+)
+
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=1e9)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = adamw_init(params, cfg)
+        for _ in range(300):
+            grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+            params, state, _ = adamw_update(params, grads, state, cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+    def test_weight_decay_shrinks(self):
+        cfg = AdamWConfig(lr=0.01, weight_decay=0.5, grad_clip=1e9)
+        params = {"w": jnp.ones((4,))}
+        state = adamw_init(params, cfg)
+        zeros = {"w": jnp.zeros((4,))}
+        for _ in range(50):
+            params, state, _ = adamw_update(params, zeros, state, cfg)
+        assert float(jnp.max(params["w"])) < 1.0
+
+    def test_bf16_params_keep_f32_master(self):
+        cfg = AdamWConfig(lr=1e-4)
+        params = {"w": jnp.ones((8,), jnp.bfloat16)}
+        state = adamw_init(params, cfg)
+        assert state["master"]["w"].dtype == jnp.float32
+        params, state, _ = adamw_update(params, {"w": jnp.ones((8,))}, state, cfg)
+        assert params["w"].dtype == jnp.bfloat16
+
+    def test_grad_clip(self):
+        g = {"a": jnp.full((10,), 100.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        n2 = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(clipped)))
+        assert abs(float(n2) - 1.0) < 1e-5
+
+    def test_sgd_momentum(self):
+        params = {"w": jnp.asarray([4.0])}
+        state = sgd_init(params)
+        for _ in range(200):
+            params, state, _ = sgd_update(params, {"w": 2 * params["w"]}, state,
+                                          lr=0.05)
+        assert abs(float(params["w"][0])) < 1e-2
+
+    def test_warmup_cosine_shape(self):
+        lr0 = warmup_cosine(jnp.asarray(0), peak_lr=1.0, warmup=10, total=100)
+        lr10 = warmup_cosine(jnp.asarray(10), peak_lr=1.0, warmup=10, total=100)
+        lr100 = warmup_cosine(jnp.asarray(100), peak_lr=1.0, warmup=10, total=100)
+        assert float(lr0) == 0.0
+        assert abs(float(lr10) - 1.0) < 1e-6
+        assert float(lr100) < 0.2
+
+
+class TestCompression:
+    def test_error_feedback_unbiased_over_steps(self):
+        """Accumulated dequantized grads converge to accumulated true grads."""
+        rng = np.random.default_rng(0)
+        g_true = jnp.asarray(rng.standard_normal(1000) * 0.01)
+        err = None
+        acc = jnp.zeros(1000)
+        for _ in range(50):
+            q, s, err = compress_grads({"g": g_true}, {"g": err["g"]} if err else None)
+            acc = acc + decompress_and_accumulate(q, s)["g"]
+        rel = float(jnp.linalg.norm(acc - 50 * g_true) / jnp.linalg.norm(50 * g_true))
+        assert rel < 1e-2, rel
+
+    def test_int8_payload(self):
+        q, s, e = compress_grads({"g": jnp.ones(64)})
+        assert q["g"].dtype == jnp.int8
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        state = {"a": jnp.arange(12.0).reshape(3, 4),
+                 "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+        mgr.save(10, state)
+        got = mgr.restore(10, state)
+        for x, y in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(got)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_retention(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        state = {"x": jnp.zeros(3)}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        assert mgr.latest_step() == 4
+        dirs = sorted(p.name for p in tmp_path.iterdir())
+        assert len(dirs) == 2
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"x": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            mgr.restore(1, {"x": jnp.zeros(3), "y": jnp.zeros(2)})
+
+    def test_kill_restart_bit_exact(self, tmp_path):
+        """Train 40 steps with a crash at step 25; resume; final params must
+        equal an uninterrupted 40-step run (checkpoint + deterministic data)."""
+        env = {**os.environ, "PYTHONPATH": "src"}
+        base = ["--arch", "qwen1.5-0.5b", "--smoke", "--steps", "40",
+                "--batch", "4", "--seq", "32", "--ckpt-every", "10"]
+        # uninterrupted reference
+        ref_dir = tmp_path / "ref"
+        r = subprocess.run([sys.executable, "-m", "repro.launch.train",
+                            *base, "--ckpt-dir", str(ref_dir)],
+                           env=env, capture_output=True, text=True, timeout=600,
+                           cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert r.returncode == 0, r.stderr[-2000:]
+        # crashed run
+        crash_dir = tmp_path / "crash"
+        r1 = subprocess.run([sys.executable, "-m", "repro.launch.train",
+                             *base, "--ckpt-dir", str(crash_dir),
+                             "--crash-at-step", "25"],
+                            env=env, capture_output=True, text=True, timeout=600,
+                            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert r1.returncode == 42  # simulated failure
+        # restart (no crash flag) — resumes from step 20 checkpoint
+        r2 = subprocess.run([sys.executable, "-m", "repro.launch.train",
+                             *base, "--ckpt-dir", str(crash_dir)],
+                            env=env, capture_output=True, text=True, timeout=600,
+                            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert r2.returncode == 0, r2.stderr[-2000:]
+        assert "resumed_from=20" in r2.stdout
+        # compare final checkpoints leaf-by-leaf
+        ref_leaves = sorted((ref_dir / "step_0000000040").glob("leaf_*.npy"))
+        got_leaves = sorted((crash_dir / "step_0000000040").glob("leaf_*.npy"))
+        assert len(ref_leaves) == len(got_leaves) > 0
+        for a, b in zip(ref_leaves, got_leaves):
+            np.testing.assert_array_equal(np.load(a), np.load(b))
+
+
+class TestData:
+    def test_deterministic_per_step(self):
+        s = TokenStream(vocab=100, seq_len=16, global_batch=4, seed=7)
+        b1 = s.batch_at(5)
+        b2 = s.batch_at(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = s.batch_at(6)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        s = TokenStream(vocab=100, seq_len=16, global_batch=2, seed=0)
+        b = s.batch_at(0)
+        # labels[i] continues tokens[i] — they come from one (seq_len+1) draw
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_sharded_batches_partition_global(self):
+        s = TokenStream(vocab=50, seq_len=8, global_batch=8, seed=1)
+        shards = [s.batch_at(3, shard=i, n_shards=4) for i in range(4)]
+        assert all(sh["tokens"].shape == (2, 8) for sh in shards)
+        # different shards differ
+        assert not np.array_equal(shards[0]["tokens"], shards[1]["tokens"])
