@@ -1,0 +1,64 @@
+"""Backend matrix + batched-PPR throughput (the serving-shape numbers).
+
+Two questions this answers on any hardware:
+
+  1. Push-backend comparison — same solve, same graph, each registered
+     ``step_impl``: wall time, iteration count and the hardware-independent
+     operation count M(T).  The frontier row also reports the *edge-visit*
+     saving (its compressed working set vs. m x iterations).
+  2. Batched-PPR amortisation — solving B personalized queries in one
+     batched pass vs. B sequential solves.  The ratio is the serving win:
+     the edge stream is read once per iteration for the whole batch.
+
+CPU wall-clock caveats from benchmarks/common.py apply (interpret-mode
+Pallas is Python-slow by construction); iteration/op counts transfer.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    available_step_impls,
+    ita,
+    one_hot_personalizations,
+    solve_pagerank_batch,
+)
+from repro.graph import web_graph
+
+from .common import csv_row, timed
+
+
+def run(datasets=None) -> list[str]:
+    rows = []
+    g = web_graph(20_000, 160_000, dangling_frac=0.15, seed=7)
+
+    # 1. backend matrix on one solve
+    for impl in available_step_impls():
+        r, best = timed(ita, g, xi=1e-10, step_impl=impl, repeats=2)
+        rows.append(csv_row(
+            f"backend/{impl}", best * 1e6,
+            f"iters={r.iterations} ops={r.ops:.3e} converged={r.converged}"))
+
+    # 2. batched PPR vs sequential
+    B = 16
+    seeds = np.random.default_rng(0).choice(g.n, size=B, replace=False)
+    P = one_hot_personalizations(g, seeds)
+    # repeats=2 so neither side pays one-time trace/compile in the ratio
+    rb, t_batch = timed(solve_pagerank_batch, g, P, method="ita", xi=1e-10,
+                        repeats=2)
+    t0 = time.perf_counter()
+    for i in range(B):
+        jax.block_until_ready(ita(g, p=P[i], xi=1e-10).pi)
+    t_seq = time.perf_counter() - t0
+    rows.append(csv_row(
+        f"ppr_batch/B{B}", t_batch * 1e6,
+        f"seq_us={t_seq * 1e6:.1f} speedup={t_seq / max(t_batch, 1e-12):.2f}x "
+        f"iters={rb.iterations}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -10,6 +10,7 @@ from __future__ import annotations
 import sys
 
 from . import (
+    bench_backends,
     bench_convergence,
     bench_dynamic,
     bench_ita_vs_power,
@@ -28,6 +29,7 @@ SUITES = {
     "mc": bench_monte_carlo.run,
     "kernels": bench_kernels.run,
     "dynamic": bench_dynamic.run,
+    "backends": bench_backends.run,
 }
 
 

@@ -16,6 +16,10 @@ class PageRankConfig:
     xi: float = 1e-10
     dataset: str = "web-Google"
     scale: float = 1.0
+    # push backend from core/backends.py: "dense" | "frontier" | "ell"
+    step_impl: str = "dense"
+    # if > 0, serve this many one-hot PPR queries per batched pass
+    ppr_batch: int = 0
 
 
 def make_config() -> PageRankConfig:

@@ -1,5 +1,18 @@
 """The paper's contribution: ITA and its baselines, as composable JAX modules."""
-from .api import SOLVERS, reference_pagerank, solve_pagerank
+from .api import (
+    SOLVERS,
+    available_step_impls,
+    reference_pagerank,
+    solve_pagerank,
+    solve_pagerank_batch,
+)
+from .backends import STEP_IMPLS, StepBackend, get_step_impl, register_step_impl
+from .batch import (
+    BatchSolverResult,
+    ita_batch,
+    one_hot_personalizations,
+    power_method_batch,
+)
 from .dynamic import ita_incremental, ita_prioritized, ita_residual_state
 from .forward_push import forward_push
 from .ita import ita, ita_fixed_point, ita_step, ita_traced
@@ -9,8 +22,11 @@ from .power import power_method, power_method_traced, power_step
 from .propagate import dangling_mass, push_weighted, spmv_p
 
 __all__ = [
-    "SOLVERS", "SolverResult", "dangling_mass", "err_max_rel", "forward_push",
-    "ita", "ita_fixed_point", "ita_step", "ita_traced", "monte_carlo",
-    "power_method", "power_method_traced", "power_step", "push_weighted",
-    "reference_pagerank", "res_l2", "solve_pagerank", "spmv_p",
+    "BatchSolverResult", "SOLVERS", "STEP_IMPLS", "SolverResult",
+    "StepBackend", "available_step_impls", "dangling_mass", "err_max_rel",
+    "forward_push", "get_step_impl", "ita", "ita_batch", "ita_fixed_point",
+    "ita_step", "ita_traced", "monte_carlo", "one_hot_personalizations",
+    "power_method", "power_method_batch", "power_method_traced", "power_step",
+    "push_weighted", "reference_pagerank", "register_step_impl", "res_l2",
+    "solve_pagerank", "solve_pagerank_batch", "spmv_p",
 ]

@@ -3,6 +3,11 @@
 ``solve_pagerank(graph, method=...)`` is the public entry point used by the
 examples, benchmarks and the launcher.  Every solver implements PR(P, c, p)
 per the paper's abbreviation and returns a :class:`SolverResult`.
+
+Solvers that iterate the push/SpMV accept ``step_impl=`` ("dense",
+"frontier", "ell", …) to pick an edge-propagation backend from
+core/backends.py; ``solve_pagerank_batch`` (core/batch.py, re-exported
+here) solves a whole [B, n] personalization batch in one device pass.
 """
 from __future__ import annotations
 
@@ -11,13 +16,16 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 
 from ..graph.structure import Graph
+from .backends import available_step_impls
+from .batch import solve_pagerank_batch  # noqa: F401  (public re-export)
 from .forward_push import forward_push
 from .ita import ita, ita_traced
 from .metrics import SolverResult
 from .monte_carlo import monte_carlo
 from .power import power_method, power_method_traced
 
-__all__ = ["solve_pagerank", "SOLVERS", "reference_pagerank"]
+__all__ = ["solve_pagerank", "solve_pagerank_batch", "SOLVERS",
+           "available_step_impls", "reference_pagerank"]
 
 SOLVERS: dict[str, Callable[..., SolverResult]] = {
     "ita": ita,

@@ -1,0 +1,299 @@
+"""Pluggable solver backends — one push interface, many edge layouts.
+
+The paper's hot op is a single push round: ``y[dst] += w[src]`` over every
+edge, where ``w`` is the pre-scaled per-source value (``c·h·inv_deg`` for
+ITA, ``pi·inv_deg`` for the power method).  Every solver in ``repro.core``
+used to hard-code the dst-sorted ``segment_sum`` realisation of that op;
+this module turns the realisation into a registry of interchangeable
+backends so the solvers pick a layout/schedule without changing numerics
+(the paper's §IV commutativity result is exactly the licence to do this —
+same commutative sum, different grouping):
+
+  * ``"dense"``    — masked SpMV over all m COO edges via sorted
+                     ``segment_sum`` (paper-faithful synchronous baseline).
+  * ``"frontier"`` — active-set compression: each round gathers only the
+                     out-edges of currently-active vertices into a
+                     power-of-two-padded bucket, so the per-iteration edge
+                     working set shrinks with the frontier.  Host-driven
+                     (data-dependent shapes), bounded recompiles.
+  * ``"ell"``      — bucketed-ELL layout driven by the Pallas kernel
+                     ``repro.kernels.spmv_ell`` (interpret-mode on CPU,
+                     compiled Mosaic on TPU).  Conversion is cached on the
+                     :class:`Graph` via ``Graph.ell()``.
+
+Registry contract
+-----------------
+A backend is a :class:`StepBackend` with
+
+  ``prepare(g) -> ctx``           one-time per-graph context (a pytree);
+  ``push(g, ctx, w) -> y``        y[dst] = Σ_{(src,dst)∈E} w[src], [n]→[n];
+  ``push_batch(g, ctx, W) -> Y``  the same over a [B, n] batch;
+  ``jittable``                    whether ``push`` may be traced inside
+                                  ``jit``/``while_loop`` (the frontier
+                                  backend is host-driven and is not).
+
+``ita_step_impl`` / ``signed_ita_step_impl`` build the full ITA round on
+top of ``push``; ``run_ita_loop`` runs either the jitted device-resident
+``while_loop`` (jittable backends) or the host-driven loop (frontier) with
+identical semantics.  New layouts register with
+``@register_step_impl("name")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.structure import Graph
+
+__all__ = [
+    "StepBackend", "STEP_IMPLS", "register_step_impl", "get_step_impl",
+    "available_step_impls", "ita_step_impl", "signed_ita_step_impl",
+    "run_ita_loop",
+]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+class StepBackend:
+    """Base class: one edge-propagation layout/schedule."""
+
+    name: str = "?"
+    jittable: bool = True
+
+    def prepare(self, g: Graph):
+        """Per-graph context (pytree), built once outside the loop."""
+        return None
+
+    def push(self, g: Graph, ctx, w: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def push_batch(self, g: Graph, ctx, W: jnp.ndarray) -> jnp.ndarray:
+        """[B, n] → [B, n]; default is a vmap of ``push``."""
+        return jax.vmap(lambda w: self.push(g, ctx, w))(W)
+
+
+STEP_IMPLS: dict[str, StepBackend] = {}
+
+
+def register_step_impl(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate and register a backend under ``name``."""
+    def deco(cls: type) -> type:
+        inst = cls()
+        inst.name = name
+        STEP_IMPLS[name] = inst
+        return cls
+    return deco
+
+
+def get_step_impl(name: str) -> StepBackend:
+    if name not in STEP_IMPLS:
+        raise KeyError(
+            f"unknown step_impl {name!r}; available: {sorted(STEP_IMPLS)}")
+    return STEP_IMPLS[name]
+
+
+def available_step_impls(jittable_only: bool = False) -> list[str]:
+    return sorted(n for n, b in STEP_IMPLS.items()
+                  if b.jittable or not jittable_only)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+@register_step_impl("dense")
+class DenseBackend(StepBackend):
+    """Sorted segment-sum over the full dst-sorted COO edge list."""
+
+    def push(self, g: Graph, ctx, w: jnp.ndarray) -> jnp.ndarray:
+        return jax.ops.segment_sum(w[g.src], g.dst, num_segments=g.n,
+                                   indices_are_sorted=True)
+
+    def push_batch(self, g: Graph, ctx, W: jnp.ndarray) -> jnp.ndarray:
+        # one gather + one segment-sum over the trailing axis beats B
+        # separate scans: the edge index stream is read once per batch.
+        contrib = W[:, g.src]                                   # [B, m]
+        return jax.ops.segment_sum(contrib.T, g.dst, num_segments=g.n,
+                                   indices_are_sorted=True).T   # [B, n]
+
+
+@register_step_impl("ell")
+class EllBackend(StepBackend):
+    """Bucketed-ELL layout, Pallas kernel on the push (repro.kernels)."""
+
+    def prepare(self, g: Graph):
+        return g.ell()
+
+    def push(self, g: Graph, ctx, w: jnp.ndarray) -> jnp.ndarray:
+        from ..kernels.spmv_ell import spmv_ell
+        return spmv_ell(ctx, w)
+
+    def push_batch(self, g: Graph, ctx, W: jnp.ndarray) -> jnp.ndarray:
+        from ..kernels.spmv_ell import spmv_ell_batch
+        return spmv_ell_batch(ctx, W)
+
+
+class _FrontierPlan:
+    """Host-side CSR-by-src view used to slice out the active frontier."""
+
+    def __init__(self, g: Graph):
+        from ..graph.structure import csr_from_graph
+
+        self.offsets, self.dst_by_src = csr_from_graph(g, by="src")
+        self.deg = np.asarray(g.out_deg).astype(np.int64)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _frontier_coo_push(w_pad: jnp.ndarray, src_e: jnp.ndarray,
+                       dst_e: jnp.ndarray, n: int) -> jnp.ndarray:
+    # sentinel slot n absorbs padding: w_pad[n] == 0 and dst n is dropped.
+    contrib = w_pad[src_e]
+    return jax.ops.segment_sum(contrib, dst_e, num_segments=n + 1)[:n]
+
+
+@register_step_impl("frontier")
+class FrontierBackend(StepBackend):
+    """Active-set compression: push only the out-edges of the frontier.
+
+    Each round the nonzero support of ``w`` (exactly the active,
+    non-dangling set — dangling sources have ``inv_deg == 0``) is located
+    on the host, its out-edges gathered from a CSR-by-src plan, and the
+    resulting compressed COO padded to the next power of two so the jitted
+    push sees at most log2(m) distinct shapes across the whole solve.
+    Host-driven by construction — not traceable inside ``while_loop``.
+    """
+
+    jittable = False
+
+    def prepare(self, g: Graph) -> _FrontierPlan:
+        return _FrontierPlan(g)
+
+    def push(self, g: Graph, ctx: _FrontierPlan, w: jnp.ndarray) -> jnp.ndarray:
+        w_host = np.asarray(w)
+        vs = np.nonzero(w_host)[0]
+        counts = ctx.deg[vs]
+        total = int(counts.sum())
+        if total == 0:
+            return jnp.zeros((g.n,), w.dtype)
+        # edge positions = concat of CSR ranges, vectorised
+        starts = ctx.offsets[vs]
+        shift = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        pos = np.arange(total, dtype=np.int64) + np.repeat(starts - shift, counts)
+        src_e = np.repeat(vs, counts)
+        dst_e = ctx.dst_by_src[pos]
+        cap = 1 << int(total - 1).bit_length()  # next power of two
+        src_p = np.full(cap, g.n, np.int32)
+        dst_p = np.full(cap, g.n, np.int32)
+        src_p[:total] = src_e
+        dst_p[:total] = dst_e
+        w_pad = jnp.concatenate([w, jnp.zeros((1,), w.dtype)])
+        return _frontier_coo_push(w_pad, jnp.asarray(src_p), jnp.asarray(dst_p),
+                                  g.n)
+
+    def push_batch(self, g: Graph, ctx, W: jnp.ndarray) -> jnp.ndarray:
+        # host-driven push cannot be vmapped; each row has its own frontier.
+        return jnp.stack([self.push(g, ctx, W[i]) for i in range(W.shape[0])])
+
+
+# ---------------------------------------------------------------------------
+# The shared ITA round, generic over the push backend
+# ---------------------------------------------------------------------------
+def _ita_round(backend: StepBackend, g: Graph, ctx, h, pi_bar, c, xi,
+               inv_deg, non_dangling, signed: bool):
+    """The one ITA round body every solver shares.
+
+    ``signed`` selects the |h| activity threshold (incremental updates push
+    negative corrections); everything else — accumulate, push, Formula-15
+    ops and the Management-thread CNT — is identical by construction, so a
+    fix here reaches the plain, signed and batched solvers alike.
+    """
+    mag = jnp.abs(h) if signed else h
+    active = jnp.logical_and(mag > xi, non_dangling)
+    h_act = jnp.where(active, h, 0)
+    pi_bar = pi_bar + h_act
+    pushed = backend.push(g, ctx, h_act * inv_deg * c)
+    h = jnp.where(active, 0, h) + pushed
+    n_active = jnp.sum(active, dtype=jnp.int32)
+    ops = jnp.sum(jnp.where(active, g.out_deg, 0).astype(jnp.float32),
+                  dtype=jnp.float32)
+    return h, pi_bar, n_active, ops
+
+
+def ita_step_impl(backend: StepBackend, g: Graph, ctx, h, pi_bar, c, xi,
+                  inv_deg, non_dangling):
+    """One synchronous ITA round over any backend.
+
+    Same contract as :func:`repro.core.ita.ita_step`:
+    returns ``(h', pi_bar', n_active, ops)``.
+    """
+    return _ita_round(backend, g, ctx, h, pi_bar, c, xi, inv_deg,
+                      non_dangling, signed=False)
+
+
+def signed_ita_step_impl(backend: StepBackend, g: Graph, ctx, h, pi_bar, c,
+                         xi, inv_deg, non_dangling):
+    """Signed variant (|h| threshold) used by the incremental solver."""
+    return _ita_round(backend, g, ctx, h, pi_bar, c, xi, inv_deg,
+                      non_dangling, signed=True)
+
+
+# NOTE: the backend INSTANCE is the static jit key (not its registry name):
+# re-registering a different backend under the same name must invalidate
+# cached traces, and instances are identity-hashed.
+@partial(jax.jit, static_argnames=("max_iter", "backend", "signed"))
+def _ita_loop_jit(g: Graph, ctx, h0, pi_bar0, c, xi, max_iter: int,
+                  backend: StepBackend, signed: bool):
+    inv_deg = g.inv_out_deg(h0.dtype)
+    non_dangling = jnp.logical_not(g.dangling_mask)
+
+    def cond(state):
+        _, _, n_active, _, it = state
+        return jnp.logical_and(n_active > 0, it < max_iter)
+
+    def body(state):
+        h, pi_bar, _, ops_total, it = state
+        h, pi_bar, n_active, ops = _ita_round(backend, g, ctx, h, pi_bar, c,
+                                              xi, inv_deg, non_dangling,
+                                              signed)
+        return h, pi_bar, n_active, ops_total + ops, it + 1
+
+    init = (h0, pi_bar0, jnp.asarray(1, jnp.int32),
+            jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+def run_ita_loop(g: Graph, h0, pi_bar0, *, c: float, xi: float,
+                 max_iter: int, impl: str = "dense", signed: bool = False,
+                 ctx=None):
+    """Run ITA rounds to quiescence over the named backend.
+
+    Jittable backends get the device-resident ``while_loop``; host-driven
+    backends (frontier) run the same step in a python loop.  Returns
+    ``(h, pi_bar, n_active, ops_total, iterations)``.
+    """
+    backend = get_step_impl(impl)
+    if ctx is None:
+        ctx = backend.prepare(g)
+    if backend.jittable:
+        return _ita_loop_jit(g, ctx, h0, pi_bar0, float(c), float(xi),
+                             int(max_iter), backend, signed)
+    inv_deg = g.inv_out_deg(h0.dtype)
+    non_dangling = jnp.logical_not(g.dangling_mask)
+    h, pi_bar = h0, pi_bar0
+    ops_total, it = 0.0, 0
+    n_active = jnp.asarray(1, jnp.int32)
+    while it < max_iter:
+        h, pi_bar, n_active, ops = _ita_round(backend, g, ctx, h, pi_bar, c,
+                                              xi, inv_deg, non_dangling,
+                                              signed)
+        ops_total += float(ops)
+        it += 1
+        if int(n_active) == 0:
+            break
+    return h, pi_bar, n_active, jnp.asarray(ops_total, jnp.float32), \
+        jnp.asarray(it, jnp.int32)

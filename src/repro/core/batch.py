@@ -1,0 +1,205 @@
+"""Batched personalization — one device pass serves many PPR queries.
+
+The serving shape the ROADMAP's "millions of users" target needs: a
+personalized-PageRank query is PR(P, c, p_u) for a per-user preference
+vector p_u, and the graph operand (the edge stream — by far the larger
+side of the SpMV) is IDENTICAL across users.  Solving a [B, n] batch in
+one pass therefore reads the edge structure once per iteration for all B
+queries: arithmetic intensity grows ~linearly in B until vertex state
+fills VMEM, which is exactly where the batched ELL kernel
+(``spmv_ell_bucket_batch``) wants to operate.
+
+Semantics: each batch row follows bit-for-bit the trajectory it would in a
+sequential solve —
+
+  * ITA rows that reach quiescence stop changing on their own (a quiet row
+    pushes nothing), so running the batch until ALL rows are quiet leaves
+    every row exactly where its own solve would;
+  * power-method rows are frozen the iteration their residual crosses
+    ``tol`` (a per-row ``done`` mask), matching the sequential stopping
+    rule instead of silently over-iterating converged rows.
+
+Backends come from core/backends.py via their ``push_batch`` op;
+``step_impl="frontier"`` falls back to a host-driven loop like the
+single-query solvers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.structure import Graph
+from .backends import get_step_impl
+
+__all__ = ["BatchSolverResult", "ita_batch", "power_method_batch",
+           "solve_pagerank_batch", "one_hot_personalizations"]
+
+
+@dataclasses.dataclass
+class BatchSolverResult:
+    """Uniform return type for the batched solvers; ``pi`` is [B, n]."""
+
+    pi: jnp.ndarray
+    iterations: int
+    residual: float
+    converged: bool
+    method: str
+    batch: int
+    wall_time_s: Optional[float] = None
+
+    def stats(self) -> dict:
+        return dict(method=self.method, batch=self.batch,
+                    iterations=int(self.iterations),
+                    residual=float(self.residual),
+                    converged=bool(self.converged),
+                    wall_time_s=self.wall_time_s)
+
+
+def one_hot_personalizations(g: Graph, seeds, dtype=jnp.float64) -> jnp.ndarray:
+    """[B, n] matrix of single-seed preference vectors (classic PPR)."""
+    seeds = jnp.asarray(seeds, jnp.int32)
+    return jax.nn.one_hot(seeds, g.n, dtype=dtype)
+
+
+def _batch_ita_step(backend, g, ctx, H, PiBar, c, xi, inv_deg, non_dangling):
+    active = jnp.logical_and(H > xi, non_dangling[None, :])
+    H_act = jnp.where(active, H, 0)
+    PiBar = PiBar + H_act
+    pushed = backend.push_batch(g, ctx, H_act * inv_deg[None, :] * c)
+    H = jnp.where(active, 0, H) + pushed
+    n_active = jnp.sum(active, dtype=jnp.int32)
+    return H, PiBar, n_active
+
+
+# static key is the backend instance, so re-registration invalidates traces
+@partial(jax.jit, static_argnames=("max_iter", "backend"))
+def _ita_batch_loop(g: Graph, ctx, H0, c, xi, max_iter: int, backend):
+    inv_deg = g.inv_out_deg(H0.dtype)
+    non_dangling = jnp.logical_not(g.dangling_mask)
+
+    def cond(state):
+        _, _, n_active, it = state
+        return jnp.logical_and(n_active > 0, it < max_iter)
+
+    def body(state):
+        H, PiBar, _, it = state
+        H, PiBar, n_active = _batch_ita_step(backend, g, ctx, H, PiBar, c, xi,
+                                             inv_deg, non_dangling)
+        return H, PiBar, n_active, it + 1
+
+    init = (H0, jnp.zeros_like(H0), jnp.asarray(1, jnp.int32),
+            jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+def ita_batch(
+    g: Graph,
+    p_batch: jnp.ndarray,
+    *,
+    c: float = 0.85,
+    xi: float = 1e-10,
+    max_iter: int = 10_000,
+    dtype=jnp.float64,
+    step_impl: str = "dense",
+) -> BatchSolverResult:
+    """Multi-source ITA: ``p_batch`` is [B, n], one preference row per query."""
+    backend = get_step_impl(step_impl)
+    ctx = backend.prepare(g)
+    H0 = (jnp.asarray(p_batch, dtype) * g.n).astype(dtype)
+    t0 = time.perf_counter()
+    if backend.jittable:
+        H, PiBar, n_active, it = _ita_batch_loop(
+            g, ctx, H0, float(c), float(xi), int(max_iter), backend)
+    else:
+        inv_deg = g.inv_out_deg(dtype)
+        non_dangling = jnp.logical_not(g.dangling_mask)
+        H, PiBar = H0, jnp.zeros_like(H0)
+        it, n_active = 0, jnp.asarray(1, jnp.int32)
+        while it < max_iter:
+            H, PiBar, n_active = _batch_ita_step(
+                backend, g, ctx, H, PiBar, c, xi, inv_deg, non_dangling)
+            it += 1
+            if int(n_active) == 0:
+                break
+    PiBar = PiBar + H
+    Pi = PiBar / jnp.sum(PiBar, axis=1, keepdims=True)
+    Pi = jax.block_until_ready(Pi)
+    return BatchSolverResult(
+        pi=Pi, iterations=int(it), residual=float(xi),
+        converged=bool(int(n_active) == 0), method=f"ita_batch[{step_impl}]",
+        batch=int(p_batch.shape[0]), wall_time_s=time.perf_counter() - t0)
+
+
+@partial(jax.jit, static_argnames=("max_iter", "backend"))
+def _power_batch_loop(g: Graph, ctx, P, c, tol, max_iter: int, backend):
+    inv_deg = g.inv_out_deg(P.dtype)
+    dmask = g.dangling_mask
+
+    def cond(state):
+        _, Res, it = state
+        return jnp.logical_and(jnp.any(Res > tol), it < max_iter)
+
+    def body(state):
+        Pi, Res, it = state
+        Y = c * backend.push_batch(g, ctx, Pi * inv_deg[None, :])
+        dm = jnp.sum(jnp.where(dmask[None, :], Pi, 0), axis=1, keepdims=True)
+        Pi_new = Y + (c * dm + (1.0 - c)) * P
+        res_new = jnp.linalg.norm(Pi_new - Pi, axis=1)
+        # freeze rows that already met tol — the sequential stopping rule
+        done = Res <= tol
+        Pi_next = jnp.where(done[:, None], Pi, Pi_new)
+        Res_next = jnp.where(done, Res, res_new)
+        return Pi_next, Res_next, it + 1
+
+    B = P.shape[0]
+    init = (P, jnp.full((B,), jnp.inf, P.dtype), jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+def power_method_batch(
+    g: Graph,
+    p_batch: jnp.ndarray,
+    *,
+    c: float = 0.85,
+    tol: float = 1e-10,
+    max_iter: int = 1000,
+    dtype=jnp.float64,
+    step_impl: str = "dense",
+) -> BatchSolverResult:
+    backend = get_step_impl(step_impl)
+    if not backend.jittable:
+        # every vertex stays active under the power iteration — frontier
+        # compression buys nothing, so route through the dense batch path.
+        return power_method_batch(g, p_batch, c=c, tol=tol, max_iter=max_iter,
+                                  dtype=dtype, step_impl="dense")
+    ctx = backend.prepare(g)
+    P = jnp.asarray(p_batch, dtype)
+    t0 = time.perf_counter()
+    Pi, Res, it = _power_batch_loop(g, ctx, P, float(c), float(tol),
+                                    int(max_iter), backend)
+    Pi = jax.block_until_ready(Pi)
+    return BatchSolverResult(
+        pi=Pi, iterations=int(it), residual=float(jnp.max(Res)),
+        converged=bool(jnp.all(Res <= tol)),
+        method=f"power_batch[{step_impl}]", batch=int(P.shape[0]),
+        wall_time_s=time.perf_counter() - t0)
+
+
+_BATCH_SOLVERS = {"ita": ita_batch, "power": power_method_batch}
+
+
+def solve_pagerank_batch(g: Graph, p_batch: jnp.ndarray, method: str = "ita",
+                         **kwargs) -> BatchSolverResult:
+    """Solve PR(P, c, p_u) for every row p_u of ``p_batch`` in one pass."""
+    if method not in _BATCH_SOLVERS:
+        raise KeyError(f"unknown batch solver {method!r}; "
+                       f"available: {sorted(_BATCH_SOLVERS)}")
+    p_batch = jnp.asarray(p_batch)
+    if p_batch.ndim != 2 or p_batch.shape[1] != g.n:
+        raise ValueError(f"p_batch must be [B, n={g.n}], got {p_batch.shape}")
+    return _BATCH_SOLVERS[method](g, p_batch, **kwargs)

@@ -40,50 +40,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.structure import Graph
+from .backends import get_step_impl, run_ita_loop
 from .metrics import SolverResult
 
 __all__ = ["ita_residual_state", "ita_incremental", "ita_prioritized"]
 
 
-def _signed_ita_loop(g: Graph, h0, pi_bar0, c, xi, max_iter):
-    inv_deg = g.inv_out_deg(h0.dtype)
-    non_dangling = jnp.logical_not(g.dangling_mask)
-
-    def cond(state):
-        _, _, n_active, _, it = state
-        return jnp.logical_and(n_active > 0, it < max_iter)
-
-    def body(state):
-        h, pi_bar, _, ops_total, it = state
-        active = jnp.logical_and(jnp.abs(h) > xi, non_dangling)
-        h_act = jnp.where(active, h, 0)
-        pi_bar = pi_bar + h_act
-        contrib = (h_act * inv_deg)[g.src] * c
-        pushed = jax.ops.segment_sum(contrib, g.dst, num_segments=g.n)
-        h = jnp.where(active, 0, h) + pushed
-        n_active = jnp.sum(active, dtype=jnp.int32)
-        ops = jnp.sum(jnp.where(active, g.out_deg, 0).astype(jnp.float32),
-                      dtype=jnp.float32)
-        return h, pi_bar, n_active, ops_total + ops, it + 1
-
-    init = (h0, pi_bar0, jnp.asarray(1, jnp.int32),
-            jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32))
-    return jax.lax.while_loop(cond, body, init)
-
-
-_signed_ita_loop_jit = jax.jit(_signed_ita_loop, static_argnames=("max_iter",))
-
-
 def ita_residual_state(g: Graph, *, c: float = 0.85, xi: float = 1e-12,
-                       dtype=jnp.float64):
+                       dtype=jnp.float64, step_impl: str = "dense"):
     """Solve from scratch, returning (pi_bar_unnormalized, h_leftover).
 
     This is the warm-start state ``ita_incremental`` consumes.
     """
     h0 = jnp.ones((g.n,), dtype)
     pi0 = jnp.zeros((g.n,), dtype)
-    h, pi_bar, n_active, ops, it = _signed_ita_loop_jit(
-        g, h0, pi0, float(c), float(xi), 100_000)
+    h, pi_bar, n_active, ops, it = run_ita_loop(
+        g, h0, pi0, c=c, xi=xi, max_iter=100_000, impl=step_impl, signed=True)
     return pi_bar, h, float(ops), int(it)
 
 
@@ -96,6 +68,7 @@ def ita_incremental(
     c: float = 0.85,
     xi: float = 1e-12,
     max_iter: int = 100_000,
+    step_impl: str = "dense",
 ) -> SolverResult:
     """Update PageRank after edge insertions/deletions.
 
@@ -103,11 +76,12 @@ def ita_incremental(
     signed ITA from (π̄=ū_old, h=r') on the NEW graph.
     """
     dtype = pi_bar_old.dtype
+    backend = get_step_impl(step_impl)
+    ctx = backend.prepare(g_new)
     t0 = time.perf_counter()
 
     def push(g: Graph, x):
-        contrib = (x * g.inv_out_deg(dtype))[g.src] * c
-        return jax.ops.segment_sum(contrib, g.dst, num_segments=g.n)
+        return backend.push(g, ctx, x * g.inv_out_deg(dtype) * c)
 
     # Exact warm-start from the run invariant  π̄ + h = p + cP π̄  (which the
     # converged old state satisfies to ξ): under the NEW graph the required
@@ -118,8 +92,9 @@ def ita_incremental(
     p_vec = jnp.ones((g_new.n,), dtype)  # paper scale: h₀ = n·(e/n) = 1
     r = p_vec + push(g_new, pi_bar_old) - pi_bar_old
 
-    h, pi_bar, n_active, ops, it = _signed_ita_loop_jit(
-        g_new, r, pi_bar_old, float(c), float(xi), max_iter)
+    h, pi_bar, n_active, ops, it = run_ita_loop(
+        g_new, r, pi_bar_old, c=c, xi=xi, max_iter=max_iter, impl=step_impl,
+        signed=True, ctx=ctx)
     pi_bar = pi_bar + h
     pi = pi_bar / jnp.sum(pi_bar)
     pi = jax.block_until_ready(pi)
@@ -130,8 +105,9 @@ def ita_incremental(
     )
 
 
-@partial(jax.jit, static_argnames=("max_iter", "k"))
-def _prioritized_loop(g: Graph, h0, c, xi, k: int, max_iter: int):
+@partial(jax.jit, static_argnames=("max_iter", "k", "backend"))
+def _prioritized_loop(g: Graph, ctx, h0, c, xi, k: int, max_iter: int,
+                      backend):
     inv_deg = g.inv_out_deg(h0.dtype)
     non_dangling = jnp.logical_not(g.dangling_mask)
 
@@ -148,8 +124,7 @@ def _prioritized_loop(g: Graph, h0, c, xi, k: int, max_iter: int):
         active = jnp.logical_and(eligible, h >= jnp.maximum(kth, xi))
         h_act = jnp.where(active, h, 0)
         pi_bar = pi_bar + h_act
-        contrib = (h_act * inv_deg)[g.src] * c
-        pushed = jax.ops.segment_sum(contrib, g.dst, num_segments=g.n)
+        pushed = backend.push(g, ctx, h_act * inv_deg * c)
         h = jnp.where(active, 0, h) + pushed
         n_elig = jnp.sum(eligible, dtype=jnp.int32)
         ops = jnp.sum(jnp.where(active, g.out_deg, 0).astype(jnp.float32),
@@ -163,13 +138,23 @@ def _prioritized_loop(g: Graph, h0, c, xi, k: int, max_iter: int):
 
 def ita_prioritized(g: Graph, *, c: float = 0.85, xi: float = 1e-10,
                     k: Optional[int] = None, max_iter: int = 1_000_000,
-                    dtype=jnp.float64) -> SolverResult:
+                    dtype=jnp.float64,
+                    step_impl: str = "dense") -> SolverResult:
     """Top-K max-residual push (order freedom the paper's §IV proves)."""
+    from .backends import available_step_impls
+
+    backend = get_step_impl(step_impl)
+    if not backend.jittable:
+        raise ValueError(
+            f"ita_prioritized needs a jittable backend (top_k inside "
+            f"while_loop); got step_impl={step_impl!r}; "
+            f"jittable: {available_step_impls(jittable_only=True)}")
+    ctx = backend.prepare(g)
     k = k or max(g.n // 16, 1)
     t0 = time.perf_counter()
     h0 = jnp.ones((g.n,), dtype)
     h, pi_bar, n_active, ops, it = _prioritized_loop(
-        g, h0, float(c), float(xi), int(k), int(max_iter))
+        g, ctx, h0, float(c), float(xi), int(k), int(max_iter), backend)
     pi_bar = pi_bar + h
     pi = pi_bar / jnp.sum(pi_bar)
     pi = jax.block_until_ready(pi)

@@ -21,22 +21,24 @@ Operation accounting reproduces Formula (15):
     m(t) = Σ_{v active at t} out_deg(v),   M(T) = Σ_t m(t)
 and the active-vertex counter is the Management-thread CNT of Algorithm 3.
 
-Beyond-paper fast paths (selected by ``step_impl``; §Perf):
+Beyond-paper fast paths (selected by ``step_impl``; see core/backends.py):
   * "dense"    — masked SpMV over all m edges (paper-faithful baseline).
   * "frontier" — frontier compression: gathers the active sub-frontier into
                  fixed-size buckets so the per-iteration edge working set
                  shrinks with the active set (attacks the memory term).
+  * "ell"      — bucketed-ELL layout via the Pallas kernel
+                 ``repro.kernels.spmv_ell`` (interpret-mode on CPU).
 """
 from __future__ import annotations
 
 import time
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..graph.structure import Graph
+from .backends import get_step_impl, ita_step_impl, run_ita_loop
 from .metrics import SolverResult, err_max_rel, res_l2
 
 __all__ = ["ita", "ita_traced", "ita_step", "ita_fixed_point"]
@@ -55,44 +57,11 @@ def ita_step(
 
     Pure function of its inputs — reused verbatim by the jitted loop, the
     traced loop, the distributed shard_map solver and the Pallas kernel's
-    oracle tests.
+    oracle tests.  This is the ``"dense"`` backend's step; other layouts
+    live in ``core/backends.py``.
     """
-    active = jnp.logical_and(h > xi, non_dangling)
-    h_act = jnp.where(active, h, 0)
-    pi_bar = pi_bar + h_act
-    # push: c * P @ h_act  (gather from src, sorted segment-sum into dst)
-    contrib = (h_act * inv_deg)[g.src] * c
-    pushed = jax.ops.segment_sum(contrib, g.dst, num_segments=g.n)
-    h = jnp.where(active, 0, h) + pushed
-    n_active = jnp.sum(active, dtype=jnp.int32)
-    ops = jnp.sum(jnp.where(active, g.out_deg, 0).astype(jnp.float32),
-                  dtype=jnp.float32)
-    return h, pi_bar, n_active, ops
-
-
-@partial(jax.jit, static_argnames=("max_iter",))
-def _ita_loop(g: Graph, h0: jnp.ndarray, c: float, xi: float, max_iter: int):
-    inv_deg = g.inv_out_deg(h0.dtype)
-    non_dangling = jnp.logical_not(g.dangling_mask)
-
-    def cond(state):
-        _, _, n_active, _, it = state
-        return jnp.logical_and(n_active > 0, it < max_iter)
-
-    def body(state):
-        h, pi_bar, _, ops_total, it = state
-        h, pi_bar, n_active, ops = ita_step(g, h, pi_bar, c, xi, inv_deg, non_dangling)
-        return h, pi_bar, n_active, ops_total + ops, it + 1
-
-    pi_bar0 = jnp.zeros_like(h0)
-    init = (h0, pi_bar0, jnp.asarray(1, jnp.int32),
-            jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32))
-    h, pi_bar, n_active, ops_total, it = jax.lax.while_loop(cond, body, init)
-    # Fold the in-flight residual — including everything parked on dangling
-    # vertices — then normalize (Algorithm 3 final step).
-    pi_bar = pi_bar + h
-    pi = pi_bar / jnp.sum(pi_bar)
-    return pi, n_active, ops_total, it
+    return ita_step_impl(get_step_impl("dense"), g, None, h, pi_bar, c, xi,
+                         inv_deg, non_dangling)
 
 
 def _default_h0(g: Graph, p, dtype) -> jnp.ndarray:
@@ -112,11 +81,20 @@ def ita(
     p: Optional[jnp.ndarray] = None,
     max_iter: int = 10_000,
     dtype=jnp.float64,
+    step_impl: str = "dense",
 ) -> SolverResult:
-    """Jitted fast path (device-resident ``while_loop``)."""
+    """Fast path: device-resident ``while_loop`` for jittable backends,
+    host-driven frontier loop otherwise (``step_impl`` selects, see
+    core/backends.py)."""
     h0 = _default_h0(g, p, dtype)
     t0 = time.perf_counter()
-    pi, n_active, ops, it = _ita_loop(g, h0, float(c), float(xi), int(max_iter))
+    h, pi_bar, n_active, ops, it = run_ita_loop(
+        g, h0, jnp.zeros_like(h0), c=c, xi=xi, max_iter=max_iter,
+        impl=step_impl)
+    # Fold the in-flight residual — including everything parked on dangling
+    # vertices — then normalize (Algorithm 3 final step).
+    pi_bar = pi_bar + h
+    pi = pi_bar / jnp.sum(pi_bar)
     pi = jax.block_until_ready(pi)
     wall = time.perf_counter() - t0
     return SolverResult(
@@ -125,7 +103,7 @@ def ita(
         residual=float(xi),
         ops=float(ops),
         converged=bool(int(n_active) == 0),
-        method="ita",
+        method="ita" if step_impl == "dense" else f"ita[{step_impl}]",
         wall_time_s=wall,
     )
 
@@ -139,16 +117,24 @@ def ita_traced(
     max_iter: int = 10_000,
     dtype=jnp.float64,
     pi_true: Optional[jnp.ndarray] = None,
+    step_impl: str = "dense",
 ) -> SolverResult:
     """Instrumented loop: per-iteration RES (between successive normalized
     estimates), active-set size (Management thread's CNT), per-round ops
     m(t), and ERR when a reference is provided.  Used by the Fig. 1/2/3/5
     reproductions and the active-set-decay analysis."""
+    backend = get_step_impl(step_impl)
+    ctx = backend.prepare(g)
     h = _default_h0(g, p, dtype)
     pi_bar = jnp.zeros_like(h)
     inv_deg = g.inv_out_deg(dtype)
     non_dangling = jnp.logical_not(g.dangling_mask)
-    step = jax.jit(lambda h, pb: ita_step(g, h, pb, c, xi, inv_deg, non_dangling))
+
+    def _step(h, pb):
+        return ita_step_impl(backend, g, ctx, h, pb, c, xi, inv_deg,
+                             non_dangling)
+
+    step = jax.jit(_step) if backend.jittable else _step
 
     res_hist, active_hist, ops_hist, err_hist = [], [], [], []
     est_prev = None
@@ -183,7 +169,7 @@ def ita_traced(
         residual=res_hist[-1] if res_hist else float("nan"),
         ops=ops_total,
         converged=True,
-        method="ita",
+        method="ita" if step_impl == "dense" else f"ita[{step_impl}]",
         res_history=res_hist,
         active_history=active_hist,
         ops_history=ops_hist,

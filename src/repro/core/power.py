@@ -9,6 +9,12 @@ never materialising P' or P''.  Per-iteration cost is (2m + n) operations
 (paper §V.D) plus — crucially for the distributed comparison — one *global
 reduction* for the dangling mass, which ITA does not need.
 
+The SpMV inside each application goes through the pluggable backend layer
+(core/backends.py): ``step_impl="dense"`` is the sorted-segment-sum
+baseline, ``"ell"`` drives the Pallas bucketed-ELL kernel.  The power
+iteration keeps every vertex active, so non-jittable active-set backends
+(``"frontier"``) are routed to the dense pass — compression buys nothing.
+
 Two entry points:
   * ``power_method``       — jitted ``lax.while_loop`` fast path.
   * ``power_method_traced``— python loop capturing per-iteration RES/ERR
@@ -24,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..graph.structure import Graph
+from .backends import StepBackend, get_step_impl
 from .metrics import SolverResult, res_l2
 from .propagate import dangling_mass, spmv_p
 
@@ -38,8 +45,17 @@ def power_step(g: Graph, pi: jnp.ndarray, p: jnp.ndarray, c: float,
     return y + (c * dm + (1.0 - c)) * p
 
 
-@partial(jax.jit, static_argnames=("max_iter",))
-def _power_loop(g: Graph, p: jnp.ndarray, c: float, tol: float, max_iter: int):
+def _power_step_impl(backend: StepBackend, g: Graph, ctx, pi, p, c, inv_deg):
+    """power_step with the SpMV routed through a backend."""
+    y = c * backend.push(g, ctx, pi * inv_deg)
+    dm = dangling_mass(g, pi)
+    return y + (c * dm + (1.0 - c)) * p
+
+
+# static key is the backend instance, so re-registration invalidates traces
+@partial(jax.jit, static_argnames=("max_iter", "backend"))
+def _power_loop(g: Graph, ctx, p: jnp.ndarray, c: float, tol: float,
+                max_iter: int, backend: StepBackend):
     inv_deg = g.inv_out_deg(p.dtype)
 
     def cond(state):
@@ -48,7 +64,7 @@ def _power_loop(g: Graph, p: jnp.ndarray, c: float, tol: float, max_iter: int):
 
     def body(state):
         pi, _, it = state
-        pi_new = power_step(g, pi, p, c, inv_deg)
+        pi_new = _power_step_impl(backend, g, ctx, pi, p, c, inv_deg)
         return pi_new, res_l2(pi_new, pi), it + 1
 
     pi0 = p
@@ -68,12 +84,22 @@ def power_method(
     tol: float = 1e-10,
     max_iter: int = 1000,
     dtype=jnp.float64,
+    step_impl: str = "dense",
 ) -> SolverResult:
+    backend = get_step_impl(step_impl)
+    if not backend.jittable:
+        # every vertex stays active under the power iteration — active-set
+        # compression buys nothing, so route through the dense fast path
+        # (same substitution power_method_batch makes).
+        return power_method(g, c=c, p=p, tol=tol, max_iter=max_iter,
+                            dtype=dtype, step_impl="dense")
     if p is None:
         p = _default_p(g, dtype)
     p = p.astype(dtype)
+    ctx = backend.prepare(g)
     t0 = time.perf_counter()
-    pi, res, it = _power_loop(g, p, float(c), float(tol), int(max_iter))
+    pi, res, it = _power_loop(g, ctx, p, float(c), float(tol),
+                              int(max_iter), backend)
     pi = jax.block_until_ready(pi)
     wall = time.perf_counter() - t0
     it = int(it)
@@ -83,7 +109,7 @@ def power_method(
         residual=float(res),
         ops=float((2 * g.m + g.n) * it),
         converged=bool(res <= tol),
-        method="power",
+        method="power" if step_impl == "dense" else f"power[{step_impl}]",
         wall_time_s=wall,
     )
 

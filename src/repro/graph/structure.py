@@ -90,6 +90,26 @@ class Graph:
             deg=round(self.avg_degree, 2),
         )
 
+    # ---- cached layouts -----------------------------------------------------
+    def ell(self, *, widths: tuple = (8, 32, 128), row_align: int = 8):
+        """Bucketed-ELL view of this graph (``repro.sparse.ell``), cached.
+
+        Conversion is host-side O(m) work; solvers and kernels that consume
+        the ELL layout (the ``"ell"`` step backend, GNN aggregation) go
+        through here so the cost is paid once per (graph, widths) pair.
+        The cache lives outside the pytree: jit/vmap boundaries see only
+        the edge arrays, and flattened copies simply rebuild on first use.
+        """
+        key = (tuple(sorted(widths)), int(row_align))
+        cache = getattr(self, "_ell_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_ell_cache", cache)
+        if key not in cache:
+            from ..sparse.ell import ell_from_graph
+            cache[key] = ell_from_graph(self, widths=key[0], row_align=row_align)
+        return cache[key]
+
 
 def graph_from_edges(
     src: np.ndarray,

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["spmv_ell_bucket", "DEFAULT_BLOCK_ROWS"]
+__all__ = ["spmv_ell_bucket", "spmv_ell_bucket_batch", "DEFAULT_BLOCK_ROWS"]
 
 DEFAULT_BLOCK_ROWS = 256
 
@@ -73,3 +73,52 @@ def spmv_ell_bucket(
         interpret=interpret,
     )(w_padded, src_idx)
     return out[: rows - pad] if pad else out
+
+
+def _spmv_ell_batch_kernel(w_ref, idx_ref, out_ref):
+    # w_ref:   [B, n+1]          (VMEM-resident operand matrix)
+    # idx_ref: [block_rows, k]   (one edge tile, shared across the batch)
+    # out_ref: [B, block_rows]
+    idx = idx_ref[...]
+    w = w_ref[...]
+    gathered = w[:, idx]                    # [B, block_rows, k]
+    out_ref[...] = jnp.sum(gathered, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell_bucket_batch(
+    w_padded: jnp.ndarray,   # [B, n+1] — sentinel zero column at index n
+    src_idx: jnp.ndarray,    # int32[rows, k]
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Multi-source variant: one index-tile stream serves B operand rows.
+
+    This is the batched-personalization hot path — the edge tiles (the
+    large, streamed operand) are read from HBM ONCE per grid step and
+    amortised over every personalization vector in the batch, so arithmetic
+    intensity grows linearly in B where B·spmv_ell_bucket would re-stream
+    the indices B times.
+    """
+    B = w_padded.shape[0]
+    rows, k = src_idx.shape
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        sentinel = jnp.full((pad, k), w_padded.shape[1] - 1, src_idx.dtype)
+        src_idx = jnp.concatenate([src_idx, sentinel], axis=0)
+        rows += pad
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _spmv_ell_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(w_padded.shape, lambda i: (0, 0)),          # whole W in VMEM
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),         # edge tile
+        ],
+        out_specs=pl.BlockSpec((B, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, rows), w_padded.dtype),
+        interpret=interpret,
+    )(w_padded, src_idx)
+    return out[:, : rows - pad] if pad else out

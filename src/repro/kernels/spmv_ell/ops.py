@@ -14,9 +14,9 @@ import jax.numpy as jnp
 
 from ...graph.structure import Graph
 from ...sparse.ell import ELLGraph
-from .kernel import spmv_ell_bucket
+from .kernel import spmv_ell_bucket, spmv_ell_bucket_batch
 
-__all__ = ["spmv_ell", "ita_step_ell"]
+__all__ = ["spmv_ell", "spmv_ell_batch", "ita_step_ell"]
 
 
 def _interpret_default() -> bool:
@@ -40,6 +40,31 @@ def spmv_ell(ell: ELLGraph, w: jnp.ndarray, *, block_rows: int = 256,
             jax.ops.segment_sum(w[ell.ovf_src], ell.ovf_dst,
                                 num_segments=ell.n, indices_are_sorted=True))
     return y[: ell.n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell_batch(ell: ELLGraph, W: jnp.ndarray, *, block_rows: int = 256,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Batched push: [B, n] operand rows through one edge-tile stream.
+
+    Serves ``solve_pagerank_batch`` — every bucket's index matrix is
+    streamed once and gathered against all B personalization rows.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    B = W.shape[0]
+    Wp = jnp.concatenate([W, jnp.zeros((B, 1), W.dtype)], axis=1)
+    y = jnp.zeros((B, ell.n + 1), W.dtype)
+    for b in ell.buckets:
+        rows_sum = spmv_ell_bucket_batch(Wp, b.src_idx, block_rows=block_rows,
+                                         interpret=interpret)
+        y = y.at[:, b.row_ids].add(rows_sum)
+    if ell.ovf_src.shape[0]:
+        ovf = jax.ops.segment_sum(Wp[:, ell.ovf_src].T, ell.ovf_dst,
+                                  num_segments=ell.n,
+                                  indices_are_sorted=True).T
+        y = y.at[:, : ell.n].add(ovf)
+    return y[:, : ell.n]
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -1,11 +1,13 @@
 """The paper's workload as a launchable job.
 
     PYTHONPATH=src python -m repro.launch.pagerank --dataset web-Google \
-        --scale 0.05 --method ita --xi 1e-10
+        --scale 0.05 --method ita --xi 1e-10 --step-impl ell
 
 Single-device by default; ``--partition 1d|2d`` runs the distributed
 solvers over whatever devices exist (the dry-run exercises the same code
-on the 512-device production mesh).
+on the 512-device production mesh).  ``--batch B`` switches to the serving
+shape: B one-hot personalized-PageRank queries solved in one device pass
+(core/batch.py) instead of a single global ranking.
 """
 from __future__ import annotations
 
@@ -21,6 +23,12 @@ def main(argv=None) -> int:
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--method", default="ita",
                     choices=["ita", "power", "forward_push", "monte_carlo"])
+    ap.add_argument("--step-impl", default="dense",
+                    help="push backend: dense | frontier | ell "
+                         "(core/backends.py registry)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="if > 0, solve this many one-hot PPR queries in "
+                         "one batched pass instead of one global ranking")
     ap.add_argument("--xi", type=float, default=1e-10)
     ap.add_argument("--c", type=float, default=0.85)
     ap.add_argument("--partition", choices=["none", "1d", "2d"], default="none")
@@ -28,11 +36,28 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     jax.config.update("jax_enable_x64", True)
-    from ..core import solve_pagerank
+    from ..core import one_hot_personalizations, solve_pagerank, solve_pagerank_batch
     from ..graph import paper_dataset
 
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
     print(f"graph: {g.stats()}")
+
+    if args.batch > 0:
+        import numpy as np
+        rng = np.random.default_rng(args.seed)
+        seeds = rng.choice(g.n, size=args.batch, replace=False)
+        if args.method not in ("ita", "power"):
+            ap.error(f"--batch supports methods ita|power, got {args.method!r}")
+        P = one_hot_personalizations(g, seeds)
+        kwargs = ({"xi": args.xi} if args.method == "ita" else {"tol": args.xi})
+        rb = solve_pagerank_batch(g, P, method=args.method, c=args.c,
+                                  step_impl=args.step_impl, **kwargs)
+        print(f"batched PPR: {rb.stats()}")
+        for b in range(min(args.batch, 4)):
+            top = jax.numpy.argsort(-rb.pi[b])[:3]
+            print(f"  seed {int(seeds[b])}: top-3 "
+                  f"{[(int(i), float(rb.pi[b, i])) for i in top]}")
+        return 0
 
     if args.partition == "none":
         kwargs = {"c": args.c}
@@ -40,6 +65,8 @@ def main(argv=None) -> int:
             kwargs["xi"] = args.xi
         elif args.method == "power":
             kwargs["tol"] = args.xi
+        if args.method in ("ita", "power"):
+            kwargs["step_impl"] = args.step_impl
         r = solve_pagerank(g, method=args.method, **kwargs)
     else:
         from ..core.distributed import ita_distributed_1d, ita_distributed_2d

@@ -1,0 +1,67 @@
+"""Property-test shim: hypothesis when installed, seeded random fallback.
+
+Tier-1 must collect and run on a bare container (no ``hypothesis``), so the
+property-based tests import ``given``/``settings``/``strategies`` from here.
+When hypothesis is available (the ``test`` extra) the real thing is used
+unchanged; otherwise a minimal shim draws ``max_examples`` samples per test
+from a deterministic per-test RNG — weaker (no shrinking, no adaptive
+search) but the same parameter space and fully reproducible.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import types
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    strategies = types.SimpleNamespace(integers=_integers, floats=_floats)
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        """Accepts (a subset of) hypothesis.settings kwargs; stores the
+        example budget on the decorated function for ``given`` to read."""
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # @settings sits ABOVE @given, so it annotates this wrapper;
+                # read the attribute at call time from either location.
+                n = getattr(wrapper, "_propcheck_max_examples",
+                            getattr(fn, "_propcheck_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+            # pytest resolves fixtures from the *unwrapped* signature; the
+            # drawn parameters are not fixtures, so hide the original fn.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

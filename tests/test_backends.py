@@ -1,0 +1,257 @@
+"""Backend-layer contract: every registered step_impl is exchangeable.
+
+The paper's §IV commutativity result says any grouping/order of pushes
+yields the same pi — so every backend (dense segment-sum, frontier
+compression, Pallas bucketed-ELL) must agree with the Neumann-series
+oracle and the power method to tight tolerance on graphs WITH the paper's
+"special vertices" (dangling, unreferenced, self-loops).  The batched
+solvers must match sequential solves row-for-row.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    available_step_impls,
+    get_step_impl,
+    ita,
+    ita_batch,
+    ita_fixed_point,
+    ita_step,
+    ita_traced,
+    one_hot_personalizations,
+    power_method,
+    power_method_batch,
+    solve_pagerank_batch,
+)
+from repro.core.backends import STEP_IMPLS, StepBackend, register_step_impl
+from repro.graph import graph_from_edges, web_graph
+
+ALL_IMPLS = available_step_impls()
+JITTABLE_IMPLS = available_step_impls(jittable_only=True)
+
+
+def _special_vertex_graph():
+    """Small graph exercising every special case the paper names:
+    dangling (3), unreferenced (0), self-loops (2, 4), plus a normal core."""
+    src = np.array([0, 0, 1, 2, 2, 4, 5, 5, 1])
+    dst = np.array([1, 2, 3, 2, 5, 4, 1, 4, 5])
+    return graph_from_edges(src, dst, 6)
+
+
+GRAPHS = {
+    "special": _special_vertex_graph,
+    "web": lambda: web_graph(400, 3200, dangling_frac=0.25, seed=17),
+    "unref": lambda: web_graph(300, 2100, dangling_frac=0.1, unref_boost=0.4,
+                               seed=18),
+}
+
+
+class TestRegistry:
+    def test_expected_backends_registered(self):
+        assert {"dense", "frontier", "ell"} <= set(STEP_IMPLS)
+
+    def test_unknown_impl_raises(self):
+        with pytest.raises(KeyError):
+            get_step_impl("nope")
+        g = web_graph(50, 300, seed=0)
+        with pytest.raises(KeyError):
+            ita(g, step_impl="nope")
+
+    def test_jittable_subset(self):
+        assert set(JITTABLE_IMPLS) <= set(ALL_IMPLS)
+        assert not get_step_impl("frontier").jittable
+
+    def test_register_and_use_custom_backend(self):
+        @register_step_impl("_test_double_dense")
+        class _DoubleDense(StepBackend):
+            def push(self, g, ctx, w):
+                return jax.ops.segment_sum(w[g.src], g.dst, num_segments=g.n)
+
+        try:
+            g = web_graph(100, 700, dangling_frac=0.1, seed=3)
+            pi_ref = power_method(g, tol=1e-14, max_iter=500).pi
+            pi = ita(g, xi=1e-14, step_impl="_test_double_dense").pi
+            np.testing.assert_allclose(pi, pi_ref, atol=1e-11)
+        finally:
+            del STEP_IMPLS["_test_double_dense"]
+
+
+class TestPushContract:
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_push_equals_dense_segment_sum(self, impl):
+        g = web_graph(300, 2400, dangling_frac=0.2, seed=9)
+        backend = get_step_impl(impl)
+        ctx = backend.prepare(g)
+        w = jnp.asarray(np.random.default_rng(0).random(g.n))
+        ref = jax.ops.segment_sum(w[g.src], g.dst, num_segments=g.n)
+        np.testing.assert_allclose(backend.push(g, ctx, w), ref, atol=1e-12)
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_push_batch_equals_rowwise_push(self, impl):
+        g = web_graph(200, 1500, dangling_frac=0.15, seed=10)
+        backend = get_step_impl(impl)
+        ctx = backend.prepare(g)
+        W = jnp.asarray(np.random.default_rng(1).random((5, g.n)))
+        Y = backend.push_batch(g, ctx, W)
+        for i in range(5):
+            np.testing.assert_allclose(Y[i], backend.push(g, ctx, W[i]),
+                                       atol=1e-12)
+
+    def test_frontier_push_empty_frontier(self):
+        g = web_graph(50, 300, dangling_frac=0.1, seed=11)
+        backend = get_step_impl("frontier")
+        ctx = backend.prepare(g)
+        y = backend.push(g, ctx, jnp.zeros((g.n,), jnp.float64))
+        assert float(jnp.max(jnp.abs(y))) == 0.0
+
+
+class TestEquivalenceAcrossBackends:
+    """Every backend == Neumann oracle == power method, atol 1e-11."""
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    @pytest.mark.parametrize("gname", sorted(GRAPHS))
+    def test_ita_matches_power_and_oracle(self, impl, gname):
+        g = GRAPHS[gname]()
+        pi_power = power_method(g, tol=1e-14, max_iter=500).pi
+        pi_oracle = ita_fixed_point(g, n_terms=300)
+        pi = ita(g, xi=1e-14, step_impl=impl).pi
+        np.testing.assert_allclose(pi, pi_power, atol=1e-11)
+        np.testing.assert_allclose(pi, pi_oracle, atol=1e-11)
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_power_method_across_backends(self, impl):
+        g = GRAPHS["web"]()
+        pi_ref = power_method(g, tol=1e-14, max_iter=500).pi
+        pi = power_method(g, tol=1e-14, max_iter=500, step_impl=impl).pi
+        np.testing.assert_allclose(pi, pi_ref, atol=1e-11)
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_ita_step_contract(self, impl):
+        """One round of any backend == one round of core ita_step."""
+        from repro.core.backends import ita_step_impl
+
+        g = GRAPHS["web"]()
+        backend = get_step_impl(impl)
+        ctx = backend.prepare(g)
+        h = jnp.ones((g.n,), jnp.float64)
+        pi_bar = jnp.zeros_like(h)
+        inv_deg = g.inv_out_deg(jnp.float64)
+        nd = jnp.logical_not(g.dangling_mask)
+        for _ in range(4):
+            h1, pb1, na1, ops1 = ita_step(g, h, pi_bar, 0.85, 1e-8, inv_deg, nd)
+            h2, pb2, na2, ops2 = ita_step_impl(backend, g, ctx, h, pi_bar,
+                                               0.85, 1e-8, inv_deg, nd)
+            np.testing.assert_allclose(h2, h1, atol=1e-13)
+            np.testing.assert_allclose(pb2, pb1, atol=1e-13)
+            assert int(na1) == int(na2) and float(ops1) == float(ops2)
+            h, pi_bar = h1, pb1
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_personalized_across_backends(self, impl):
+        g = GRAPHS["web"]()
+        p = np.zeros(g.n)
+        p[:5] = 0.2
+        p = jnp.asarray(p)
+        pi_ref = power_method(g, p=p, tol=1e-14, max_iter=500).pi
+        pi = ita(g, p=p, xi=1e-15, step_impl=impl).pi
+        np.testing.assert_allclose(pi, pi_ref, atol=1e-11)
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_traced_matches_fast_path(self, impl):
+        g = GRAPHS["unref"]()
+        r_fast = ita(g, xi=1e-12, step_impl=impl)
+        r_traced = ita_traced(g, xi=1e-12, step_impl=impl)
+        np.testing.assert_allclose(r_traced.pi, r_fast.pi, atol=1e-13)
+        assert r_traced.active_history[-1] <= r_traced.active_history[0]
+
+
+class TestDynamicAcrossBackends:
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_incremental_update(self, impl):
+        from repro.core import ita_incremental, ita_residual_state
+
+        g0 = web_graph(400, 3000, dangling_frac=0.15, seed=20)
+        pi_bar, h, _, _ = ita_residual_state(g0, xi=1e-13, step_impl=impl)
+        rng = np.random.default_rng(21)
+        src = np.concatenate([np.asarray(g0.src), rng.integers(0, g0.n, 15)])
+        dst = np.concatenate([np.asarray(g0.dst), rng.integers(0, g0.n, 15)])
+        g1 = graph_from_edges(src, dst, g0.n)
+        r = ita_incremental(g0, g1, pi_bar, h, xi=1e-13, step_impl=impl)
+        pi_ref = power_method(g1, tol=1e-14, max_iter=500).pi
+        np.testing.assert_allclose(r.pi, pi_ref, atol=1e-10)
+
+
+class TestBatchedPPR:
+    def test_batch_matches_sequential_ita(self):
+        g = web_graph(400, 3200, dangling_frac=0.2, seed=30)
+        seeds = np.arange(8) * 7 % g.n
+        P = one_hot_personalizations(g, seeds)
+        rb = solve_pagerank_batch(g, P, method="ita", xi=1e-13)
+        assert rb.converged and rb.pi.shape == (8, g.n)
+        for i in range(8):
+            pi_seq = ita(g, p=P[i], xi=1e-13).pi
+            np.testing.assert_allclose(rb.pi[i], pi_seq, atol=1e-12)
+
+    def test_batch_matches_sequential_power(self):
+        g = web_graph(300, 2400, dangling_frac=0.15, seed=31)
+        seeds = np.arange(8)
+        P = one_hot_personalizations(g, seeds)
+        rb = solve_pagerank_batch(g, P, method="power", tol=1e-12)
+        for i in range(8):
+            pi_seq = power_method(g, p=P[i], tol=1e-12).pi
+            np.testing.assert_allclose(rb.pi[i], pi_seq, atol=1e-12)
+
+    @pytest.mark.parametrize("impl", JITTABLE_IMPLS)
+    def test_batch_backends_agree(self, impl):
+        g = web_graph(250, 1800, dangling_frac=0.2, seed=32)
+        P = one_hot_personalizations(g, np.arange(6))
+        ref = ita_batch(g, P, xi=1e-13, step_impl="dense").pi
+        out = ita_batch(g, P, xi=1e-13, step_impl=impl).pi
+        np.testing.assert_allclose(out, ref, atol=1e-12)
+
+    def test_batch_frontier_host_loop(self):
+        g = web_graph(150, 1000, dangling_frac=0.2, seed=33)
+        P = one_hot_personalizations(g, np.arange(4))
+        ref = ita_batch(g, P, xi=1e-12, step_impl="dense").pi
+        out = ita_batch(g, P, xi=1e-12, step_impl="frontier").pi
+        np.testing.assert_allclose(out, ref, atol=1e-12)
+
+    def test_batch_rows_sum_to_one(self):
+        g = web_graph(200, 1400, dangling_frac=0.3, seed=34)
+        P = one_hot_personalizations(g, np.arange(5))
+        rb = solve_pagerank_batch(g, P, method="ita", xi=1e-12)
+        np.testing.assert_allclose(np.asarray(jnp.sum(rb.pi, axis=1)),
+                                   np.ones(5), atol=1e-10)
+
+    def test_batch_shape_validation(self):
+        g = web_graph(100, 600, seed=35)
+        with pytest.raises(ValueError):
+            solve_pagerank_batch(g, jnp.ones((g.n,)))
+        with pytest.raises(KeyError):
+            solve_pagerank_batch(g, jnp.ones((2, g.n)) / g.n, method="nope")
+
+    def test_power_batch_general_personalizations(self):
+        """Non-one-hot rows (mixed user profiles) work identically."""
+        g = web_graph(200, 1500, dangling_frac=0.1, seed=36)
+        rng = np.random.default_rng(0)
+        P = rng.random((8, g.n))
+        P = jnp.asarray(P / P.sum(axis=1, keepdims=True))
+        rb = power_method_batch(g, P, tol=1e-12)
+        for i in range(8):
+            pi_seq = power_method(g, p=P[i], tol=1e-12).pi
+            np.testing.assert_allclose(rb.pi[i], pi_seq, atol=1e-12)
+
+
+class TestEllCache:
+    def test_graph_ell_is_cached(self):
+        g = web_graph(200, 1500, dangling_frac=0.1, seed=40)
+        assert g.ell() is g.ell()
+        assert g.ell(widths=(4, 16)) is g.ell(widths=(16, 4))  # order-insensitive
+        assert g.ell() is not g.ell(widths=(4, 16))
+
+    def test_cache_used_by_backend(self):
+        g = web_graph(150, 900, dangling_frac=0.1, seed=41)
+        backend = get_step_impl("ell")
+        assert backend.prepare(g) is g.ell()

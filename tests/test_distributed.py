@@ -33,6 +33,7 @@ def run_py(body: str) -> dict:
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 def test_ita_1d_matches_reference():
     out = run_py("""
         import jax, json
@@ -69,6 +70,7 @@ def test_ita_2d_matches_reference():
     assert out["err"] < 1e-10, out
 
 
+@pytest.mark.slow
 def test_moe_sharded_matches_local():
     out = run_py("""
         import jax, json
@@ -99,6 +101,7 @@ def test_moe_sharded_matches_local():
     assert out["grad_sum_finite"] and out["gn"] > 0, out
 
 
+@pytest.mark.slow
 def test_lm_train_step_sharded_matches_single():
     out = run_py("""
         import jax, json
@@ -133,6 +136,7 @@ def test_lm_train_step_sharded_matches_single():
     assert out["diff"] < 1e-3, out
 
 
+@pytest.mark.slow
 def test_gnn_train_step_sharded_matches_single():
     out = run_py("""
         import jax, json
@@ -159,6 +163,7 @@ def test_gnn_train_step_sharded_matches_single():
     assert out["diff"] < 1e-4, out
 
 
+@pytest.mark.slow
 def test_gc2d_matches_reference_graphcast():
     """The ITA-2D-partition message passing (hillclimb path) must compute
     the same loss as the GSPMD reference implementation."""
@@ -208,6 +213,7 @@ def test_gc2d_matches_reference_graphcast():
     assert out["grad_finite"], out
 
 
+@pytest.mark.slow
 def test_ita_2d_compressed_bounded_error():
     """bf16-wire ITA with error feedback: half the ICI bytes for a bounded
     ~1e-3 relative precision floor (the bf16 mantissa), never divergence."""

@@ -31,6 +31,7 @@ class TestIncremental:
         pi_ref = power_method(g1, tol=1e-14, max_iter=500).pi
         np.testing.assert_allclose(r_inc.pi, pi_ref, atol=1e-10)
 
+    @pytest.mark.slow
     def test_incremental_is_cheaper(self):
         """The warm start skips the global O(m) warm-up rounds.  On
         small-world graphs the correction still REACHES most vertices

@@ -1,8 +1,8 @@
 """Graph substrate: construction invariants, generators, CSR round-trip."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings
+from _propcheck import strategies as st
 
 from repro.graph import (
     Graph,

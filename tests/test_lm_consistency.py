@@ -18,6 +18,7 @@ from repro.models.lm import (
 )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-34b", "qwen1.5-0.5b", "olmoe-1b-7b"])
 def test_decode_matches_prefill(arch):
     cfg = dataclasses.replace(get_config(arch, smoke=True), remat=False)
@@ -44,6 +45,7 @@ def test_decode_matches_prefill(arch):
     assert err < 2e-3, f"{arch}: decode/prefill diverge by {err}"
 
 
+@pytest.mark.slow
 def test_loss_path_matches_prefill_logits():
     """The train path's last-position distribution == prefill logits."""
     cfg = dataclasses.replace(get_config("qwen1.5-0.5b", smoke=True), remat=False)

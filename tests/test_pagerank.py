@@ -7,8 +7,8 @@ on graphs WITH dangling + unreferenced vertices and self-loops — exactly the
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings
+from _propcheck import strategies as st
 
 from repro.core import (
     err_max_rel,

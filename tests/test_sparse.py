@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings
+from _propcheck import strategies as st
 
 from repro.graph import web_graph
 from repro.graph.partition import partition_1d, partition_2d

@@ -119,6 +119,7 @@ class TestCheckpoint:
         with pytest.raises(ValueError):
             mgr.restore(1, {"x": jnp.zeros(3), "y": jnp.zeros(2)})
 
+    @pytest.mark.slow
     def test_kill_restart_bit_exact(self, tmp_path):
         """Train 40 steps with a crash at step 25; resume; final params must
         equal an uninterrupted 40-step run (checkpoint + deterministic data)."""
