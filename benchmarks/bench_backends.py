@@ -1,6 +1,6 @@
 """Backend matrix + batched-PPR throughput (the serving-shape numbers).
 
-Two questions this answers on any hardware:
+Three questions this answers on any hardware:
 
   1. Push-backend comparison — same solve, same graph, each registered
      ``step_impl``: wall time, iteration count and the hardware-independent
@@ -9,6 +9,12 @@ Two questions this answers on any hardware:
   2. Batched-PPR amortisation — solving B personalized queries in one
      batched pass vs. B sequential solves.  The ratio is the serving win:
      the edge stream is read once per iteration for the whole batch.
+  3. Engine serving throughput — the same B queries answered by a prepared
+     :class:`PageRankEngine` (one ``solve_batch`` pass against cached
+     classification/bucketing/ctx) vs. B calls into the deprecated
+     per-call ``solve_pagerank`` path, which re-derives that state every
+     time.  This is the prepare-once/query-many ratio the engine exists
+     for; the acceptance bar is ≥ 2x.
 
 CPU wall-clock caveats from benchmarks/common.py apply (interpret-mode
 Pallas is Python-slow by construction); iteration/op counts transfer.
@@ -16,14 +22,20 @@ Pallas is Python-slow by construction); iteration/op counts transfer.
 from __future__ import annotations
 
 import time
+import warnings
 
 import jax
 import numpy as np
 
 from repro.core import (
+    BatchConfig,
+    EnginePlan,
+    ItaConfig,
+    PageRankEngine,
     available_step_impls,
     ita,
     one_hot_personalizations,
+    solve_pagerank,
     solve_pagerank_batch,
 )
 from repro.graph import web_graph
@@ -57,6 +69,39 @@ def run(datasets=None) -> list[str]:
         f"ppr_batch/B{B}", t_batch * 1e6,
         f"seq_us={t_seq * 1e6:.1f} speedup={t_seq / max(t_batch, 1e-12):.2f}x "
         f"iters={rb.iterations}"))
+
+    # 3. engine serving throughput vs the per-call legacy path
+    engine = PageRankEngine(g, EnginePlan(step_impl="dense"))
+    cfg = BatchConfig(xi=1e-10)
+    # repeats=2: the engine side measures steady-state serving (trace warm)
+    rb, t_engine = timed(engine.solve_batch, P, cfg, repeats=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        t_legacy = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            for i in range(B):
+                jax.block_until_ready(
+                    solve_pagerank(g, method="ita", p=P[i], xi=1e-10).pi)
+            t_legacy = min(t_legacy, time.perf_counter() - t0)
+    rows.append(csv_row(
+        f"engine_serving/B{B}", t_engine * 1e6,
+        f"legacy_us={t_legacy * 1e6:.1f} "
+        f"speedup={t_legacy / max(t_engine, 1e-12):.2f}x "
+        f"qps={B / max(t_engine, 1e-12):.1f}"))
+
+    # 3b. prepare amortisation in isolation: repeated single solves on the
+    # frontier backend, whose per-graph CSR plan is the prepare-heavy one.
+    engine_f = PageRankEngine(g, EnginePlan(step_impl="frontier"))
+    r1, t_eng1 = timed(engine_f.solve, ItaConfig(xi=1e-10), repeats=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        _, t_leg1 = timed(solve_pagerank, g, method="ita", xi=1e-10,
+                          step_impl="frontier", repeats=2)
+    rows.append(csv_row(
+        "engine_repeat/frontier", t_eng1 * 1e6,
+        f"legacy_us={t_leg1 * 1e6:.1f} "
+        f"speedup={t_leg1 / max(t_eng1, 1e-12):.2f}x iters={r1.iterations}"))
     return rows
 
 

@@ -1,4 +1,4 @@
-"""Quickstart: PageRank via every solver on a web-like graph.
+"""Quickstart: the PageRankEngine lifecycle — prepare, query, update.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +8,14 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import solve_pagerank  # noqa: E402
+from repro.core import (  # noqa: E402
+    EnginePlan,
+    ForwardPushConfig,
+    ItaConfig,
+    MonteCarloConfig,
+    PageRankEngine,
+    PowerConfig,
+)
 from repro.graph import web_graph  # noqa: E402
 
 
@@ -16,18 +23,26 @@ def main():
     # 50k vertices, 400k edges, 15% dangling — the paper's "special
     # vertices" need no preprocessing under the constructive definition.
     g = web_graph(50_000, 400_000, dangling_frac=0.15, seed=0)
-    print("graph:", g.stats())
 
+    # 1. prepare once: vertex classification (§III), backend selection and
+    #    its per-graph context are paid here, not per query.
+    engine = PageRankEngine(g, EnginePlan(step_impl="auto"))
+    print("engine:", engine.describe())
+
+    # 2. query: each solver takes its typed config (the old
+    #    solve_pagerank(g, method=..., **kwargs) funnel is deprecated).
     results = {}
-    for method, kw in (
-        ("power", dict(tol=1e-12)),
-        ("ita", dict(xi=1e-12)),
-        ("forward_push", dict(xi=1e-13)),
-        ("monte_carlo", dict(walks_per_vertex=8)),
+    for cfg in (
+        PowerConfig(tol=1e-12),
+        ItaConfig(xi=1e-12),
+        ForwardPushConfig(xi=1e-13),
+        MonteCarloConfig(walks_per_vertex=8),
     ):
-        r = solve_pagerank(g, method=method, **kw)
-        results[method] = r
-        print(f"{method:14s} iters={r.iterations:4d} ops={r.ops:12.3e} "
+        r = engine.solve(cfg)
+        # r.method carries the backend suffix ("power[ell]" on TPU's auto
+        # path) — key results by the bare method name.
+        results[r.method.split("[")[0]] = r
+        print(f"{r.method:14s} iters={r.iterations:4d} ops={r.ops:12.3e} "
               f"wall={r.wall_time_s:7.3f}s")
 
     pi_ref = results["power"].pi
@@ -37,6 +52,18 @@ def main():
 
     top = jnp.argsort(-pi_ref)[:5]
     print("top-5 vertices:", [(int(i), round(float(pi_ref[i]), 6)) for i in top])
+
+    # 3. serve: batched personalized queries against the prepared graph.
+    tk = engine.topk(sources=[int(top[0]), int(top[1])], k=3)
+    for s, idx, sc in zip(top[:2], tk.indices, tk.scores):
+        print(f"PPR from seed {int(s)}: "
+              f"{[(int(i), round(float(v), 5)) for i, v in zip(idx, sc)]}")
+
+    # 4. update: an edge delta re-ranks incrementally (no from-scratch
+    #    solve); the engine re-prepares and keeps its residual state.
+    ru = engine.update(add=[(int(top[0]), int(top[4]))])
+    print(f"after update: iters={ru.iterations} ops={ru.ops:.3e} "
+          f"(incremental), engine: {engine.describe()}")
 
 
 if __name__ == "__main__":

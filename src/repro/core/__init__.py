@@ -1,12 +1,20 @@
 """The paper's contribution: ITA and its baselines, as composable JAX modules."""
 from .api import (
     SOLVERS,
+    Solver,
     available_step_impls,
+    make_config,
     reference_pagerank,
     solve_pagerank,
     solve_pagerank_batch,
 )
-from .backends import STEP_IMPLS, StepBackend, get_step_impl, register_step_impl
+from .backends import (
+    STEP_IMPLS,
+    StepBackend,
+    get_step_impl,
+    register_step_impl,
+    resolve_step_impl,
+)
 from .batch import (
     BatchSolverResult,
     ita_batch,
@@ -14,19 +22,33 @@ from .batch import (
     power_method_batch,
 )
 from .dynamic import ita_incremental, ita_prioritized, ita_residual_state
+from .engine import EnginePlan, PageRankEngine, TopKResult
 from .forward_push import forward_push
 from .ita import ita, ita_fixed_point, ita_step, ita_traced
 from .metrics import SolverResult, err_max_rel, res_l2
 from .monte_carlo import monte_carlo
 from .power import power_method, power_method_traced, power_step
 from .propagate import dangling_mass, push_weighted, spmv_p
+from .solver_config import (
+    BatchConfig,
+    ForwardPushConfig,
+    ItaConfig,
+    MonteCarloConfig,
+    PowerConfig,
+    SolverConfig,
+)
 
 __all__ = [
-    "BatchSolverResult", "SOLVERS", "STEP_IMPLS", "SolverResult",
-    "StepBackend", "available_step_impls", "dangling_mass", "err_max_rel",
-    "forward_push", "get_step_impl", "ita", "ita_batch", "ita_fixed_point",
-    "ita_step", "ita_traced", "monte_carlo", "one_hot_personalizations",
-    "power_method", "power_method_batch", "power_method_traced", "power_step",
-    "push_weighted", "reference_pagerank", "register_step_impl", "res_l2",
-    "solve_pagerank", "solve_pagerank_batch", "spmv_p",
+    "BatchConfig", "BatchSolverResult", "EnginePlan", "ForwardPushConfig",
+    "ItaConfig", "MonteCarloConfig", "PageRankEngine", "PowerConfig",
+    "SOLVERS", "STEP_IMPLS", "Solver", "SolverConfig", "SolverResult",
+    "StepBackend", "TopKResult", "available_step_impls", "dangling_mass",
+    "err_max_rel", "forward_push", "get_step_impl", "ita", "ita_batch",
+    "ita_fixed_point", "ita_incremental", "ita_prioritized",
+    "ita_residual_state", "ita_step", "ita_traced", "make_config",
+    "monte_carlo", "one_hot_personalizations", "power_method",
+    "power_method_batch", "power_method_traced", "power_step",
+    "push_weighted", "reference_pagerank", "register_step_impl",
+    "res_l2", "resolve_step_impl", "solve_pagerank", "solve_pagerank_batch",
+    "spmv_p",
 ]

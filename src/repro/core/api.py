@@ -1,16 +1,28 @@
 """Unified PageRank solver API.
 
-``solve_pagerank(graph, method=...)`` is the public entry point used by the
-examples, benchmarks and the launcher.  Every solver implements PR(P, c, p)
-per the paper's abbreviation and returns a :class:`SolverResult`.
+The registry speaks one typed protocol: every entry is a :class:`Solver`
+called as ``SOLVERS[name](g, cfg)`` where ``cfg`` is the method's config
+dataclass from ``core/solver_config.py`` (``ItaConfig``, ``PowerConfig``,
+``ForwardPushConfig``, ``MonteCarloConfig``).  Sessions that hold prepared
+per-graph state pass it via ``step_impl=``/``ctx=`` — that is how
+:class:`repro.core.engine.PageRankEngine` reuses its prepare phase without
+the solvers knowing about engines.
 
-Solvers that iterate the push/SpMV accept ``step_impl=`` ("dense",
-"frontier", "ell", …) to pick an edge-propagation backend from
-core/backends.py; ``solve_pagerank_batch`` (core/batch.py, re-exported
-here) solves a whole [B, n] personalization batch in one device pass.
+``solve_pagerank(g, method=..., **kwargs)`` survives as a *deprecation
+shim*: it builds the typed config with ``make_config`` and a throwaway
+engine, so existing callers keep working while new code writes
+
+    engine = PageRankEngine(g)
+    engine.solve(ItaConfig(xi=1e-12))
+
+``solve_pagerank_batch`` (core/batch.py, re-exported here) solves a whole
+[B, n] personalization batch in one device pass; the engine's
+``solve_batch``/``topk`` are the session forms of the same operation.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -23,24 +35,78 @@ from .ita import ita, ita_traced
 from .metrics import SolverResult
 from .monte_carlo import monte_carlo
 from .power import power_method, power_method_traced
+from .solver_config import (
+    ForwardPushConfig,
+    ItaConfig,
+    MonteCarloConfig,
+    PowerConfig,
+    SolverConfig,
+    accepted_params,
+    make_config,
+)
 
-__all__ = ["solve_pagerank", "solve_pagerank_batch", "SOLVERS",
-           "available_step_impls", "reference_pagerank"]
+__all__ = ["Solver", "solve_pagerank", "solve_pagerank_batch", "SOLVERS",
+           "available_step_impls", "make_config", "reference_pagerank"]
 
-SOLVERS: dict[str, Callable[..., SolverResult]] = {
-    "ita": ita,
-    "power": power_method,
-    "forward_push": forward_push,
-    "monte_carlo": monte_carlo,
-    "ita_traced": ita_traced,
-    "power_traced": power_method_traced,
+
+@dataclasses.dataclass(frozen=True)
+class Solver:
+    """One registry entry: a solver function plus its config type.
+
+    Uniform call shape ``solver(g, cfg)``; the optional ``step_impl``/
+    ``ctx`` pair injects a session's prepared backend state into solvers
+    that take one (push-based solvers), and is ignored by those that don't
+    (forward_push, monte_carlo).
+    """
+
+    name: str
+    fn: Callable[..., SolverResult]
+    config_cls: type
+
+    def __call__(self, g: Graph, cfg: SolverConfig, *,
+                 step_impl: Optional[str] = None, ctx=None) -> SolverResult:
+        if not isinstance(cfg, self.config_cls):
+            raise TypeError(
+                f"solver {self.name!r} takes {self.config_cls.__name__}, "
+                f"got {type(cfg).__name__}")
+        kw = cfg.kwargs_for(self.fn)
+        params = accepted_params(self.fn)
+        if step_impl is not None and "step_impl" in params:
+            kw["step_impl"] = step_impl
+            if ctx is not None and "ctx" in params:
+                kw["ctx"] = ctx  # ctx is only meaningful with its backend
+        return self.fn(g, **kw)
+
+
+SOLVERS: dict[str, Solver] = {
+    "ita": Solver("ita", ita, ItaConfig),
+    "power": Solver("power", power_method, PowerConfig),
+    "forward_push": Solver("forward_push", forward_push, ForwardPushConfig),
+    "monte_carlo": Solver("monte_carlo", monte_carlo, MonteCarloConfig),
+    "ita_traced": Solver("ita_traced", ita_traced, ItaConfig),
+    "power_traced": Solver("power_traced", power_method_traced, PowerConfig),
 }
 
 
 def solve_pagerank(g: Graph, method: str = "ita", **kwargs) -> SolverResult:
+    """Deprecated one-shot entry point (build an engine per call).
+
+    Prefer ``PageRankEngine(g).solve(cfg)`` — it pays the prepare phase
+    (vertex classification, ELL bucketing, backend ctx) once per graph
+    instead of once per call.
+    """
+    from .engine import EnginePlan, PageRankEngine
+
     if method not in SOLVERS:
         raise KeyError(f"unknown solver {method!r}; available: {sorted(SOLVERS)}")
-    return SOLVERS[method](g, **kwargs)
+    warnings.warn(
+        "solve_pagerank() re-derives per-graph state on every call; "
+        "use repro.core.engine.PageRankEngine for repeated queries",
+        DeprecationWarning, stacklevel=2)
+    cfg = make_config(method, **kwargs)
+    plan = EnginePlan(step_impl=getattr(cfg, "step_impl", None) or "dense",
+                      dtype=getattr(cfg, "dtype", jnp.float64))
+    return PageRankEngine(g, plan=plan).solve(cfg, method=method)
 
 
 def reference_pagerank(g: Graph, *, c: float = 0.85,

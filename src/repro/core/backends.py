@@ -52,8 +52,8 @@ from ..graph.structure import Graph
 
 __all__ = [
     "StepBackend", "STEP_IMPLS", "register_step_impl", "get_step_impl",
-    "available_step_impls", "ita_step_impl", "signed_ita_step_impl",
-    "run_ita_loop",
+    "available_step_impls", "resolve_step_impl", "ita_step_impl",
+    "signed_ita_step_impl", "run_ita_loop",
 ]
 
 
@@ -101,6 +101,19 @@ def get_step_impl(name: str) -> StepBackend:
 def available_step_impls(jittable_only: bool = False) -> list[str]:
     return sorted(n for n, b in STEP_IMPLS.items()
                   if b.jittable or not jittable_only)
+
+
+def resolve_step_impl(name: Optional[str]) -> str:
+    """Map ``None``/"auto" to the platform default, else validate ``name``.
+
+    The bucketed-ELL Pallas kernel compiles to Mosaic on TPU — that is
+    where its layout pays; everywhere else it runs interpret-mode
+    (Python-slow), so the sorted-segment-sum dense pass is the default.
+    """
+    if name is None or name == "auto":
+        return "ell" if jax.default_backend() == "tpu" else "dense"
+    get_step_impl(name)  # raise KeyError early for unknown names
+    return name
 
 
 # ---------------------------------------------------------------------------

@@ -106,10 +106,12 @@ def ita_batch(
     max_iter: int = 10_000,
     dtype=jnp.float64,
     step_impl: str = "dense",
+    ctx=None,
 ) -> BatchSolverResult:
     """Multi-source ITA: ``p_batch`` is [B, n], one preference row per query."""
     backend = get_step_impl(step_impl)
-    ctx = backend.prepare(g)
+    if ctx is None:
+        ctx = backend.prepare(g)
     H0 = (jnp.asarray(p_batch, dtype) * g.n).astype(dtype)
     t0 = time.perf_counter()
     if backend.jittable:
@@ -170,14 +172,17 @@ def power_method_batch(
     max_iter: int = 1000,
     dtype=jnp.float64,
     step_impl: str = "dense",
+    ctx=None,
 ) -> BatchSolverResult:
     backend = get_step_impl(step_impl)
     if not backend.jittable:
         # every vertex stays active under the power iteration — frontier
-        # compression buys nothing, so route through the dense batch path.
+        # compression buys nothing, so route through the dense batch path
+        # (the non-jittable backend's ctx is meaningless there, drop it).
         return power_method_batch(g, p_batch, c=c, tol=tol, max_iter=max_iter,
                                   dtype=dtype, step_impl="dense")
-    ctx = backend.prepare(g)
+    if ctx is None:
+        ctx = backend.prepare(g)
     P = jnp.asarray(p_batch, dtype)
     t0 = time.perf_counter()
     Pi, Res, it = _power_batch_loop(g, ctx, P, float(c), float(tol),

@@ -47,7 +47,8 @@ __all__ = ["ita_residual_state", "ita_incremental", "ita_prioritized"]
 
 
 def ita_residual_state(g: Graph, *, c: float = 0.85, xi: float = 1e-12,
-                       dtype=jnp.float64, step_impl: str = "dense"):
+                       dtype=jnp.float64, step_impl: str = "dense",
+                       ctx=None):
     """Solve from scratch, returning (pi_bar_unnormalized, h_leftover).
 
     This is the warm-start state ``ita_incremental`` consumes.
@@ -55,7 +56,8 @@ def ita_residual_state(g: Graph, *, c: float = 0.85, xi: float = 1e-12,
     h0 = jnp.ones((g.n,), dtype)
     pi0 = jnp.zeros((g.n,), dtype)
     h, pi_bar, n_active, ops, it = run_ita_loop(
-        g, h0, pi0, c=c, xi=xi, max_iter=100_000, impl=step_impl, signed=True)
+        g, h0, pi0, c=c, xi=xi, max_iter=100_000, impl=step_impl, signed=True,
+        ctx=ctx)
     return pi_bar, h, float(ops), int(it)
 
 
@@ -69,15 +71,23 @@ def ita_incremental(
     xi: float = 1e-12,
     max_iter: int = 100_000,
     step_impl: str = "dense",
+    ctx=None,
+    return_state: bool = False,
 ) -> SolverResult:
     """Update PageRank after edge insertions/deletions.
 
     r' = c·(P' − P)·ū + h_old, supported on dst(changed edges); runs the
     signed ITA from (π̄=ū_old, h=r') on the NEW graph.
+
+    ``return_state=True`` returns ``(result, (pi_bar, h))`` — the same
+    warm-start pair :func:`ita_residual_state` produces, so a session
+    (:class:`repro.core.engine.PageRankEngine`) can chain incremental
+    updates without ever re-solving from scratch.
     """
     dtype = pi_bar_old.dtype
     backend = get_step_impl(step_impl)
-    ctx = backend.prepare(g_new)
+    if ctx is None:
+        ctx = backend.prepare(g_new)  # ctx belongs to the NEW graph
     t0 = time.perf_counter()
 
     def push(g: Graph, x):
@@ -95,14 +105,17 @@ def ita_incremental(
     h, pi_bar, n_active, ops, it = run_ita_loop(
         g_new, r, pi_bar_old, c=c, xi=xi, max_iter=max_iter, impl=step_impl,
         signed=True, ctx=ctx)
-    pi_bar = pi_bar + h
-    pi = pi_bar / jnp.sum(pi_bar)
+    folded = pi_bar + h
+    pi = folded / jnp.sum(folded)
     pi = jax.block_until_ready(pi)
-    return SolverResult(
+    result = SolverResult(
         pi=pi, iterations=int(it), residual=float(xi), ops=float(ops),
         converged=bool(int(n_active) == 0), method="ita_incremental",
         wall_time_s=time.perf_counter() - t0,
     )
+    if return_state:
+        return result, (pi_bar, h)
+    return result
 
 
 @partial(jax.jit, static_argnames=("max_iter", "k", "backend"))

@@ -1,0 +1,269 @@
+"""PageRankEngine — a prepared-graph session for repeated PageRank queries.
+
+The paper's central observation (§III) is that dangling and (weakly)
+unreferenced vertices are *structure*: classify them once and every solve
+afterwards exploits the classification for free.  The one-shot entry point
+``solve_pagerank(g, method, **kwargs)`` re-derived all of that per call —
+vertex masks, the ELL bucketing, the frontier CSR plan, the backend choice.
+This module turns the derivation into an explicit **prepare** phase and the
+solves into cheap queries against it, the prepare-once/query-many shape the
+D-Iteration and forward-push serving papers assume:
+
+    engine = PageRankEngine(graph, plan=EnginePlan(step_impl="ell"))
+    r  = engine.solve(ItaConfig(xi=1e-12))          # global ranking
+    rb = engine.solve_batch(P)                      # [B, n] PPR queries
+    tk = engine.topk(sources=[3, 17], k=10)         # served PPR answers
+    ru = engine.update(add=[(5, 9)])                # incremental re-rank
+
+Prepare phase (one-time, at construction and after ``update``):
+  * vertex classification per §III — dangling / unreferenced masks and
+    counts, materialized on device;
+  * backend selection (``EnginePlan.step_impl="auto"`` resolves per
+    platform) and its per-graph context: ``Graph.ell()`` bucketing for the
+    Pallas kernel, the CSR-by-src plan for frontier compression.
+
+Queries reuse the prepared context verbatim — the engine calls the very
+same solver functions as the legacy API with ``ctx=`` threaded through, so
+results are bit-for-bit identical to ``solve_pagerank`` (asserted by
+tests/test_engine.py) while skipping all per-call preparation.  Compiled
+traces are keyed on (backend instance, config statics), so repeated queries
+hit jax's jit cache; on accelerators the batched-ITA buffer is additionally
+donated via a per-engine compiled cache (``_compiled``), keyed on the
+config's :meth:`~repro.core.solver_config.SolverConfig.static_key`.
+
+``update`` wraps ``core/dynamic.py``: the engine holds the unnormalized
+residual pair (π̄, h) across updates, so successive edge deltas each cost
+one *incremental* signed-ITA cascade instead of a from-scratch solve, and
+the state chains — update after update — without ever resolving globally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.structure import Graph, apply_edge_delta
+from .backends import get_step_impl, resolve_step_impl
+from .batch import (
+    BatchSolverResult,
+    _ita_batch_loop,
+    ita_batch,
+    one_hot_personalizations,
+    power_method_batch,
+)
+from .dynamic import ita_incremental, ita_residual_state
+from .metrics import SolverResult
+from .solver_config import BatchConfig, SolverConfig, make_config
+
+__all__ = ["EnginePlan", "PageRankEngine", "TopKResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """Static description of how an engine prepares and serves a graph.
+
+    The plan is the engine-level analogue of a solver config: everything
+    here is resolved once at prepare time and becomes part of the compiled
+    state's identity.  ``step_impl="auto"`` picks the platform default
+    (bucketed-ELL on TPU where the Mosaic kernel pays, dense elsewhere).
+    """
+
+    step_impl: Optional[str] = "auto"
+    ell_widths: tuple = (8, 32, 128)
+    row_align: int = 8
+    dtype: Any = jnp.float64
+    default_method: str = "ita"
+    c: float = 0.85          # damping used by the update/residual machinery
+    update_xi: float = 1e-12  # accuracy the maintained residual state holds
+
+
+class TopKResult(NamedTuple):
+    """Served PPR answer: per-query top-``k`` vertices and scores."""
+
+    indices: jnp.ndarray   # int32 [B, k]
+    scores: jnp.ndarray    # [B, k]
+    result: BatchSolverResult
+
+
+class PageRankEngine:
+    """Prepare a graph once; answer solve/batch/top-k/update queries."""
+
+    def __init__(self, graph: Graph, plan: Optional[EnginePlan] = None):
+        self.plan = plan or EnginePlan()
+        # monotone counter, observable by tests: one tick per prepare phase
+        # (construction + each update), never per query.
+        self.prepare_count = 0
+        self._state = None        # (pi_bar, h) residual pair for update()
+        self._compiled = {}       # static_key -> donated jitted solve
+        self._donate = jax.default_backend() != "cpu"
+        self._prepare(graph)
+
+    # ------------------------------------------------------------------ #
+    # prepare phase
+    # ------------------------------------------------------------------ #
+    def _prepare(self, g: Graph) -> None:
+        """One-time per-graph work: classify, bucket, build backend ctx."""
+        self.graph = g
+        self.step_impl = resolve_step_impl(self.plan.step_impl)
+        self.backend = get_step_impl(self.step_impl)
+        # §III vertex classification, materialized once on device.
+        self.dangling_mask = g.dangling_mask
+        self.unreferenced_mask = g.unreferenced_mask
+        self.n_dangling = int(jax.device_get(jnp.sum(self.dangling_mask)))
+        self.n_unreferenced = int(
+            jax.device_get(jnp.sum(self.unreferenced_mask)))
+        if self.step_impl == "ell":
+            # honor the plan's bucketing; Graph.ell caches per (widths,
+            # align) so the EllBackend default prepare() would otherwise
+            # convert under its own key.
+            self._ctx = g.ell(widths=self.plan.ell_widths,
+                              row_align=self.plan.row_align)
+        else:
+            self._ctx = self.backend.prepare(g)
+        self._compiled.clear()  # traces close over the old graph's buffers
+        self.prepare_count += 1
+
+    def describe(self) -> dict:
+        """Prepared-state summary (serving logs, benchmarks)."""
+        return dict(
+            n=self.graph.n, m=self.graph.m,
+            n_dangling=self.n_dangling,
+            n_unreferenced=self.n_unreferenced,
+            step_impl=self.step_impl,
+            jittable=self.backend.jittable,
+            prepare_count=self.prepare_count,
+            has_residual_state=self._state is not None,
+        )
+
+    def _require_compatible(self, cfg: SolverConfig) -> None:
+        want = getattr(cfg, "step_impl", None)
+        if want not in (None, "auto", self.step_impl):
+            raise ValueError(
+                f"config requests step_impl={want!r} but this engine "
+                f"prepared {self.step_impl!r}; construct the engine with "
+                f"EnginePlan(step_impl={want!r}) instead")
+
+    # ------------------------------------------------------------------ #
+    # queries
+    # ------------------------------------------------------------------ #
+    def solve(self, cfg: Optional[SolverConfig] = None, *,
+              method: Optional[str] = None) -> SolverResult:
+        """One PR(P, c, p) solve against the prepared graph.
+
+        ``cfg`` defaults to the plan's ``default_method`` config; ``method``
+        overrides the registry entry for configs shared between variants
+        (e.g. ``ItaConfig`` with ``method="ita_traced"``).
+        """
+        from .api import SOLVERS  # local import: api builds engines (shim)
+
+        if cfg is None:
+            cfg = make_config(self.plan.default_method, dtype=self.plan.dtype)
+        if isinstance(cfg, BatchConfig):
+            raise TypeError("BatchConfig describes a [B, n] solve; "
+                            "use solve_batch / topk")
+        method = method or type(cfg).method
+        if method not in SOLVERS:
+            raise KeyError(f"unknown solver {method!r}; "
+                           f"available: {sorted(SOLVERS)}")
+        self._require_compatible(cfg)
+        return SOLVERS[method](self.graph, cfg, step_impl=self.step_impl,
+                               ctx=self._ctx)
+
+    def solve_batch(self, p_batch: jnp.ndarray,
+                    cfg: Optional[BatchConfig] = None) -> BatchSolverResult:
+        """Solve a whole [B, n] personalization batch in one device pass."""
+        cfg = cfg or BatchConfig(dtype=self.plan.dtype)
+        if not isinstance(cfg, BatchConfig):
+            raise TypeError(f"solve_batch takes a BatchConfig, "
+                            f"got {type(cfg).__name__}")
+        self._require_compatible(cfg)
+        p_batch = jnp.asarray(p_batch)
+        if p_batch.ndim != 2 or p_batch.shape[1] != self.graph.n:
+            raise ValueError(f"p_batch must be [B, n={self.graph.n}], "
+                             f"got {p_batch.shape}")
+        if (self._donate and cfg.batch_method == "ita"
+                and self.backend.jittable):
+            return self._solve_batch_donated(p_batch, cfg)
+        if cfg.batch_method == "ita":
+            fn = ita_batch
+        elif cfg.batch_method == "power":
+            fn = power_method_batch
+        else:
+            raise KeyError(f"unknown batch_method {cfg.batch_method!r}; "
+                           f"available: ['ita', 'power']")
+        kw = cfg.kwargs_for(fn)
+        kw["step_impl"] = self.step_impl
+        kw["ctx"] = self._ctx
+        return fn(self.graph, p_batch, **kw)
+
+    def _solve_batch_donated(self, p_batch, cfg: BatchConfig):
+        """Accelerator path: per-engine compiled batched-ITA loop with the
+        [B, n] information buffer donated — the serving loop then updates
+        in place instead of allocating per micro-batch.  Numerics are the
+        shared ``_ita_batch_loop``, so results match ``ita_batch`` exactly.
+        """
+        key = ("ita_batch", cfg.static_key(), p_batch.shape)
+        fn = self._compiled.get(key)
+        if fn is None:
+            g, ctx, backend = self.graph, self._ctx, self.backend
+            c, xi, max_iter = float(cfg.c), float(cfg.xi), int(cfg.max_iter)
+
+            def run(H0):
+                return _ita_batch_loop(g, ctx, H0, c, xi, max_iter, backend)
+
+            fn = jax.jit(run, donate_argnums=(0,))
+            self._compiled[key] = fn
+        t0 = time.perf_counter()
+        H0 = (p_batch.astype(cfg.dtype) * self.graph.n).astype(cfg.dtype)
+        H, PiBar, n_active, it = fn(H0)
+        PiBar = PiBar + H
+        Pi = PiBar / jnp.sum(PiBar, axis=1, keepdims=True)
+        Pi = jax.block_until_ready(Pi)
+        return BatchSolverResult(
+            pi=Pi, iterations=int(it), residual=float(cfg.xi),
+            converged=bool(int(n_active) == 0),
+            method=f"ita_batch[{self.step_impl}]",
+            batch=int(p_batch.shape[0]),
+            wall_time_s=time.perf_counter() - t0)
+
+    def topk(self, sources, k: int = 10,
+             cfg: Optional[BatchConfig] = None) -> TopKResult:
+        """Serve PPR queries: per-source top-``k`` vertices and scores.
+
+        ``sources`` is a [B] vector of seed vertices (classic one-hot PPR).
+        """
+        P = one_hot_personalizations(self.graph, sources,
+                                     dtype=self.plan.dtype)
+        rb = self.solve_batch(P, cfg)
+        scores, indices = jax.lax.top_k(rb.pi, int(k))
+        return TopKResult(indices=indices, scores=scores, result=rb)
+
+    # ------------------------------------------------------------------ #
+    # dynamic updates
+    # ------------------------------------------------------------------ #
+    def update(self, add=(), remove=()) -> SolverResult:
+        """Apply an edge delta and incrementally re-rank.
+
+        Maintains the unnormalized residual pair (π̄, h) across calls: the
+        first update pays one from-scratch residual solve, every later one
+        runs only the signed correction cascade of ``ita_incremental`` on
+        the changed support.  The engine re-prepares for the new structure
+        (masks, bucketing, backend ctx) before solving.
+        """
+        if self._state is None:
+            pi_bar, h, _, _ = ita_residual_state(
+                self.graph, c=self.plan.c, xi=self.plan.update_xi,
+                dtype=self.plan.dtype, step_impl=self.step_impl,
+                ctx=self._ctx)
+            self._state = (pi_bar, h)
+        g_old = self.graph
+        g_new = apply_edge_delta(g_old, add=add, remove=remove)
+        self._prepare(g_new)  # ctx must belong to the NEW graph
+        pi_bar, h = self._state
+        result, self._state = ita_incremental(
+            g_old, g_new, pi_bar, h, c=self.plan.c, xi=self.plan.update_xi,
+            step_impl=self.step_impl, ctx=self._ctx, return_state=True)
+        return result

@@ -82,15 +82,18 @@ def ita(
     max_iter: int = 10_000,
     dtype=jnp.float64,
     step_impl: str = "dense",
+    ctx=None,
 ) -> SolverResult:
     """Fast path: device-resident ``while_loop`` for jittable backends,
     host-driven frontier loop otherwise (``step_impl`` selects, see
-    core/backends.py)."""
+    core/backends.py).  ``ctx`` accepts a prepared backend context (from
+    ``get_step_impl(step_impl).prepare(g)``) so a session holding one —
+    :class:`repro.core.engine.PageRankEngine` — skips re-preparation."""
     h0 = _default_h0(g, p, dtype)
     t0 = time.perf_counter()
     h, pi_bar, n_active, ops, it = run_ita_loop(
         g, h0, jnp.zeros_like(h0), c=c, xi=xi, max_iter=max_iter,
-        impl=step_impl)
+        impl=step_impl, ctx=ctx)
     # Fold the in-flight residual — including everything parked on dangling
     # vertices — then normalize (Algorithm 3 final step).
     pi_bar = pi_bar + h
@@ -118,13 +121,15 @@ def ita_traced(
     dtype=jnp.float64,
     pi_true: Optional[jnp.ndarray] = None,
     step_impl: str = "dense",
+    ctx=None,
 ) -> SolverResult:
     """Instrumented loop: per-iteration RES (between successive normalized
     estimates), active-set size (Management thread's CNT), per-round ops
     m(t), and ERR when a reference is provided.  Used by the Fig. 1/2/3/5
     reproductions and the active-set-decay analysis."""
     backend = get_step_impl(step_impl)
-    ctx = backend.prepare(g)
+    if ctx is None:
+        ctx = backend.prepare(g)
     h = _default_h0(g, p, dtype)
     pi_bar = jnp.zeros_like(h)
     inv_deg = g.inv_out_deg(dtype)

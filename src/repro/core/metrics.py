@@ -23,9 +23,16 @@ def l1_diff(pi_new: jnp.ndarray, pi_old: jnp.ndarray) -> jnp.ndarray:
 
 
 def err_max_rel(pi: jnp.ndarray, pi_true: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
-    """Paper's ERR.  ``eps`` guards division when a true value is ~0."""
-    denom = jnp.maximum(jnp.abs(pi_true), eps) if eps else pi_true
-    return jnp.max(jnp.abs(pi - pi_true) / denom)
+    """Paper's ERR.  ``eps`` guards division when a true value is ~0.
+
+    Entries where ``max(|pi_true|, eps)`` is exactly 0 — unreferenced
+    vertices can carry a genuinely zero reference score — contribute their
+    *absolute* error instead of dividing by zero (which returned inf/nan
+    for any mismatch at such an entry and poisoned the max).
+    """
+    denom = jnp.maximum(jnp.abs(pi_true), eps)
+    safe = jnp.where(denom > 0, denom, 1.0)
+    return jnp.max(jnp.abs(pi - pi_true) / safe)
 
 
 @dataclasses.dataclass

@@ -85,18 +85,21 @@ def power_method(
     max_iter: int = 1000,
     dtype=jnp.float64,
     step_impl: str = "dense",
+    ctx=None,
 ) -> SolverResult:
     backend = get_step_impl(step_impl)
     if not backend.jittable:
         # every vertex stays active under the power iteration — active-set
         # compression buys nothing, so route through the dense fast path
-        # (same substitution power_method_batch makes).
+        # (same substitution power_method_batch makes).  The prepared ctx
+        # belongs to the non-jittable backend, so it is dropped here.
         return power_method(g, c=c, p=p, tol=tol, max_iter=max_iter,
                             dtype=dtype, step_impl="dense")
     if p is None:
         p = _default_p(g, dtype)
     p = p.astype(dtype)
-    ctx = backend.prepare(g)
+    if ctx is None:
+        ctx = backend.prepare(g)
     t0 = time.perf_counter()
     pi, res, it = _power_loop(g, ctx, p, float(c), float(tol),
                               int(max_iter), backend)

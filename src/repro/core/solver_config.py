@@ -1,0 +1,186 @@
+"""Typed per-solver configuration — the replacement for the ``**kwargs`` funnel.
+
+Every solver in ``repro.core`` is parameterized by a frozen dataclass here.
+The old entry point threaded untyped keyword arguments through six solver
+signatures; a config object instead makes the parameter space explicit,
+validates it at construction (unknown fields raise ``TypeError`` from the
+dataclass machinery), and gives :class:`repro.core.engine.PageRankEngine`
+a hashable **static key** to cache prepared/compiled state under.
+
+Two kinds of fields coexist:
+
+  * *static* hyperparameters (``c``, ``xi``, ``step_impl``, ``max_iter``,
+    ``dtype``) — hashable, part of :meth:`SolverConfig.static_key`, and the
+    jit-cache identity of a solve;
+  * *operands* (``p``, ``pi_true``) — device arrays that vary per query and
+    are deliberately excluded from the key.
+
+``step_impl=None`` means "no opinion": the solver default ("dense") applies
+outside an engine, and the engine's prepared backend applies inside one.  A
+non-``None`` value is an explicit request and the engine refuses a config
+that contradicts its prepared layout rather than silently re-bucketing.
+
+``make_config(method, **kwargs)`` builds the right config for a registry
+method name — the bridge the deprecated ``solve_pagerank(g, method, **kw)``
+shim uses.  ``SolverConfig.kwargs_for(fn)`` projects a config onto an
+arbitrary solver signature so one config class can serve both the plain and
+traced variants of a solver (``ita`` / ``ita_traced``) without carrying
+fields the plain variant would reject.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from functools import lru_cache
+from typing import Any, ClassVar, Optional
+
+import jax.numpy as jnp
+
+__all__ = [
+    "SolverConfig", "ItaConfig", "PowerConfig", "ForwardPushConfig",
+    "MonteCarloConfig", "BatchConfig", "CONFIGS", "make_config",
+    "config_for", "accepted_params",
+]
+
+
+@lru_cache(maxsize=None)
+def accepted_params(fn) -> frozenset:
+    """Keyword names ``fn`` accepts, memoized — solver signatures are fixed
+    at registry construction, so the reflection must not sit on the
+    per-query path."""
+    return frozenset(inspect.signature(fn).parameters)
+
+# Field names holding device arrays (query operands) — never part of the
+# static identity of a solve.
+_OPERAND_FIELDS = frozenset({"p", "pi_true"})
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Base: fields shared by every PR(P, c, p) solver."""
+
+    c: float = 0.85
+    p: Optional[jnp.ndarray] = None  # personalization (operand, not static)
+    dtype: Any = jnp.float64
+
+    method: ClassVar[str] = "?"
+
+    def kwargs_for(self, fn) -> dict:
+        """Project this config onto ``fn``'s keyword signature.
+
+        Only fields ``fn`` actually accepts are passed; ``step_impl=None``
+        (no opinion) is dropped so the solver's own default applies.
+        """
+        accepted = accepted_params(fn)
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name not in accepted:
+                continue
+            v = getattr(self, f.name)
+            if f.name == "step_impl" and v is None:
+                continue
+            out[f.name] = v
+        return out
+
+    def static_key(self) -> tuple:
+        """Hashable identity of the solve minus its array operands."""
+        items = []
+        for f in dataclasses.fields(self):
+            if f.name in _OPERAND_FIELDS:
+                continue
+            items.append((f.name, getattr(self, f.name)))
+        return (type(self).method, type(self).__name__, tuple(items))
+
+
+@dataclasses.dataclass(frozen=True)
+class ItaConfig(SolverConfig):
+    """Paper Algorithm 3 (``ita`` / ``ita_traced``)."""
+
+    xi: float = 1e-10
+    max_iter: int = 10_000
+    step_impl: Optional[str] = None
+    pi_true: Optional[jnp.ndarray] = None  # traced variant only (ERR curve)
+
+    method: ClassVar[str] = "ita"
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerConfig(SolverConfig):
+    """Power iteration baseline (``power`` / ``power_traced``)."""
+
+    tol: float = 1e-10
+    max_iter: int = 1000
+    step_impl: Optional[str] = None
+    pi_true: Optional[jnp.ndarray] = None  # traced variant only
+
+    method: ClassVar[str] = "power"
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardPushConfig(SolverConfig):
+    """Forward Push over P' (paper Algorithm 4)."""
+
+    xi: float = 1e-12
+    max_iter: int = 10_000
+
+    method: ClassVar[str] = "forward_push"
+
+
+@dataclasses.dataclass(frozen=True)
+class MonteCarloConfig(SolverConfig):
+    """MC complete-path estimator (Avrachenkov et al.)."""
+
+    walks_per_vertex: int = 16
+    max_len: int = 64
+    seed: int = 0
+    batch_walks: int = 1 << 20
+
+    method: ClassVar[str] = "monte_carlo"
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchConfig(SolverConfig):
+    """A [B, n] multi-query solve (core/batch.py).
+
+    ``batch_method`` picks the batched solver family; ``xi`` applies to
+    "ita", ``tol`` to "power" — :meth:`kwargs_for` projects the right one.
+    """
+
+    batch_method: str = "ita"
+    xi: float = 1e-10
+    tol: float = 1e-10
+    max_iter: int = 10_000
+    step_impl: Optional[str] = None
+
+    method: ClassVar[str] = "batch"
+
+
+# method name (registry key) -> config class.  Traced variants share the
+# plain variant's config; the extra ``pi_true`` operand is signature-filtered
+# away for the plain solver.
+CONFIGS: dict[str, type] = {
+    "ita": ItaConfig,
+    "ita_traced": ItaConfig,
+    "power": PowerConfig,
+    "power_traced": PowerConfig,
+    "forward_push": ForwardPushConfig,
+    "monte_carlo": MonteCarloConfig,
+    "batch": BatchConfig,
+}
+
+
+def config_for(method: str) -> type:
+    if method not in CONFIGS:
+        raise KeyError(
+            f"no config class for method {method!r}; available: "
+            f"{sorted(CONFIGS)}")
+    return CONFIGS[method]
+
+
+def make_config(method: str, **kwargs) -> SolverConfig:
+    """Build the typed config for ``method`` from legacy keyword arguments.
+
+    Unknown keywords raise ``TypeError`` (the dataclass constructor) — the
+    same strictness the old ``**kwargs`` funnel lacked.
+    """
+    return config_for(method)(**kwargs)

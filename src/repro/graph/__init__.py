@@ -1,9 +1,15 @@
 """Graph substrate: containers, generators, partitioners, samplers."""
 from .generators import TABLE3_PRESETS, erdos_renyi, paper_dataset, random_dag, web_graph
-from .structure import Graph, csr_from_graph, graph_from_edges, validate_graph
+from .structure import (
+    Graph,
+    apply_edge_delta,
+    csr_from_graph,
+    graph_from_edges,
+    validate_graph,
+)
 
 __all__ = [
-    "Graph", "TABLE3_PRESETS", "csr_from_graph", "erdos_renyi",
-    "graph_from_edges", "paper_dataset", "random_dag", "validate_graph",
-    "web_graph",
+    "Graph", "TABLE3_PRESETS", "apply_edge_delta", "csr_from_graph",
+    "erdos_renyi", "graph_from_edges", "paper_dataset", "random_dag",
+    "validate_graph", "web_graph",
 ]

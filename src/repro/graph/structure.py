@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Graph", "graph_from_edges", "validate_graph"]
+__all__ = ["Graph", "graph_from_edges", "apply_edge_delta", "validate_graph"]
 
 
 @jax.tree_util.register_dataclass
@@ -154,6 +154,46 @@ def graph_from_edges(
         n=int(n),
         m=int(src.size),
     )
+
+
+def apply_edge_delta(g: Graph, add=(), remove=()) -> Graph:
+    """New :class:`Graph` = ``g`` plus ``add`` minus ``remove`` edge lists.
+
+    ``add``/``remove`` are iterables of ``(src, dst)`` pairs (or empty).
+    Host-side by design, like :func:`graph_from_edges` — dynamic-graph
+    mutation is data-pipeline work; the incremental solver
+    (``repro.core.dynamic``) then corrects the ranking on device without a
+    from-scratch solve.  Removing an edge that is absent, or adding one
+    that already exists, raises ``ValueError`` (silent no-ops would
+    desynchronize a session's residual state from its graph).
+    """
+    src = np.asarray(g.src, dtype=np.int64)
+    dst = np.asarray(g.dst, dtype=np.int64)
+    key = dst * np.int64(g.n) + src  # sorted-unique by Graph invariant
+    add = np.asarray(list(add), dtype=np.int64).reshape(-1, 2)
+    remove = np.asarray(list(remove), dtype=np.int64).reshape(-1, 2)
+    for name, arr in (("add", add), ("remove", remove)):
+        if arr.size and (arr.min() < 0 or arr.max() >= g.n):
+            raise ValueError(f"{name} edge endpoint out of range for n={g.n}")
+    if remove.size:
+        rkey = remove[:, 1] * np.int64(g.n) + remove[:, 0]
+        if np.unique(rkey).size != rkey.size:
+            raise ValueError("duplicate edges in remove list")
+        missing = ~np.isin(rkey, key)
+        if missing.any():
+            raise ValueError(f"cannot remove absent edges: "
+                             f"{remove[missing][:4].tolist()}")
+        key = key[~np.isin(key, rkey)]
+    if add.size:
+        akey = add[:, 1] * np.int64(g.n) + add[:, 0]
+        if np.unique(akey).size != akey.size:
+            raise ValueError("duplicate edges in add list")
+        present = np.isin(akey, key)
+        if present.any():
+            raise ValueError(f"cannot add existing edges: "
+                             f"{add[present][:4].tolist()}")
+        key = np.concatenate([key, akey])
+    return graph_from_edges((key % g.n), (key // g.n), g.n)
 
 
 def validate_graph(g: Graph) -> None:

@@ -1,4 +1,4 @@
-"""The paper's workload as a launchable job.
+"""The paper's workload as a launchable job, driven through the engine API.
 
     PYTHONPATH=src python -m repro.launch.pagerank --dataset web-Google \
         --scale 0.05 --method ita --xi 1e-10 --step-impl ell
@@ -7,7 +7,8 @@ Single-device by default; ``--partition 1d|2d`` runs the distributed
 solvers over whatever devices exist (the dry-run exercises the same code
 on the 512-device production mesh).  ``--batch B`` switches to the serving
 shape: B one-hot personalized-PageRank queries solved in one device pass
-(core/batch.py) instead of a single global ranking.
+through ``PageRankEngine.solve_batch`` (the request-loop driver around the
+same path is ``repro.launch.ppr_serve``).
 """
 from __future__ import annotations
 
@@ -24,7 +25,7 @@ def main(argv=None) -> int:
     ap.add_argument("--method", default="ita",
                     choices=["ita", "power", "forward_push", "monte_carlo"])
     ap.add_argument("--step-impl", default="dense",
-                    help="push backend: dense | frontier | ell "
+                    help="push backend: auto | dense | frontier | ell "
                          "(core/backends.py registry)")
     ap.add_argument("--batch", type=int, default=0,
                     help="if > 0, solve this many one-hot PPR queries in "
@@ -36,39 +37,19 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     jax.config.update("jax_enable_x64", True)
-    from ..core import one_hot_personalizations, solve_pagerank, solve_pagerank_batch
+    from ..core import (
+        BatchConfig,
+        EnginePlan,
+        PageRankEngine,
+        make_config,
+        one_hot_personalizations,
+    )
     from ..graph import paper_dataset
 
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
     print(f"graph: {g.stats()}")
 
-    if args.batch > 0:
-        import numpy as np
-        rng = np.random.default_rng(args.seed)
-        seeds = rng.choice(g.n, size=args.batch, replace=False)
-        if args.method not in ("ita", "power"):
-            ap.error(f"--batch supports methods ita|power, got {args.method!r}")
-        P = one_hot_personalizations(g, seeds)
-        kwargs = ({"xi": args.xi} if args.method == "ita" else {"tol": args.xi})
-        rb = solve_pagerank_batch(g, P, method=args.method, c=args.c,
-                                  step_impl=args.step_impl, **kwargs)
-        print(f"batched PPR: {rb.stats()}")
-        for b in range(min(args.batch, 4)):
-            top = jax.numpy.argsort(-rb.pi[b])[:3]
-            print(f"  seed {int(seeds[b])}: top-3 "
-                  f"{[(int(i), float(rb.pi[b, i])) for i in top]}")
-        return 0
-
-    if args.partition == "none":
-        kwargs = {"c": args.c}
-        if args.method in ("ita", "forward_push"):
-            kwargs["xi"] = args.xi
-        elif args.method == "power":
-            kwargs["tol"] = args.xi
-        if args.method in ("ita", "power"):
-            kwargs["step_impl"] = args.step_impl
-        r = solve_pagerank(g, method=args.method, **kwargs)
-    else:
+    if args.partition != "none":
         from ..core.distributed import ita_distributed_1d, ita_distributed_2d
         n_dev = len(jax.devices())
         if args.partition == "1d":
@@ -78,6 +59,38 @@ def main(argv=None) -> int:
             rows = max(1, n_dev // 2)
             mesh = jax.make_mesh((rows, n_dev // rows), ("data", "model"))
             r = ita_distributed_2d(g, mesh, c=args.c, xi=args.xi)
+        print(f"method={r.method} iterations={r.iterations} ops={r.ops:.3e} "
+              f"wall={r.wall_time_s}s converged={r.converged}")
+        top = jax.numpy.argsort(-r.pi)[:5]
+        print("top-5 vertices:", [(int(i), float(r.pi[i])) for i in top])
+        return 0
+
+    engine = PageRankEngine(g, EnginePlan(step_impl=args.step_impl,
+                                          c=args.c))
+    print(f"engine: {engine.describe()}")
+
+    if args.batch > 0:
+        import numpy as np
+        rng = np.random.default_rng(args.seed)
+        seeds = rng.choice(g.n, size=args.batch, replace=False)
+        if args.method not in ("ita", "power"):
+            ap.error(f"--batch supports methods ita|power, got {args.method!r}")
+        P = one_hot_personalizations(g, seeds)
+        rb = engine.solve_batch(P, BatchConfig(
+            batch_method=args.method, c=args.c, xi=args.xi, tol=args.xi))
+        print(f"batched PPR: {rb.stats()}")
+        for b in range(min(args.batch, 4)):
+            top = jax.numpy.argsort(-rb.pi[b])[:3]
+            print(f"  seed {int(seeds[b])}: top-3 "
+                  f"{[(int(i), float(rb.pi[b, i])) for i in top]}")
+        return 0
+
+    kwargs = {"c": args.c}
+    if args.method in ("ita", "forward_push"):
+        kwargs["xi"] = args.xi
+    elif args.method == "power":
+        kwargs["tol"] = args.xi
+    r = engine.solve(make_config(args.method, **kwargs))
     print(f"method={r.method} iterations={r.iterations} ops={r.ops:.3e} "
           f"wall={r.wall_time_s}s converged={r.converged}")
     top = jax.numpy.argsort(-r.pi)[:5]
