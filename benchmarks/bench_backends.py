@@ -15,12 +15,21 @@ Three questions this answers on any hardware:
      per-call ``solve_pagerank`` path, which re-derives that state every
      time.  This is the prepare-once/query-many ratio the engine exists
      for; the acceptance bar is ≥ 2x.
+  4. Sharded serving — the same seed stream through an engine prepared
+     with ``EnginePlan(mesh=(n_dev, 1))`` vs. the single-device engine
+     (skipped on one device).  ``--sharded-json PATH`` records this
+     comparison as a JSON baseline (``benchmarks/BENCH_ppr_sharded.json``
+     is the committed 8-simulated-device entry); on a host mesh all
+     "devices" share one CPU and the (R, 1) layout replicates the edge
+     stream, so speedup < 1 is expected — the row tracks correctness
+     (bit_identical) + overhead, not speedup, which needs real devices.
 
 CPU wall-clock caveats from benchmarks/common.py apply (interpret-mode
 Pallas is Python-slow by construction); iteration/op counts transfer.
 """
 from __future__ import annotations
 
+import json
 import time
 import warnings
 
@@ -102,8 +111,89 @@ def run(datasets=None) -> list[str]:
         "engine_repeat/frontier", t_eng1 * 1e6,
         f"legacy_us={t_leg1 * 1e6:.1f} "
         f"speedup={t_leg1 / max(t_eng1, 1e-12):.2f}x iters={r1.iterations}"))
+
+    # 4. sharded serving vs single-device (needs > 1 device); reuse the
+    # graph and seed stream already built above
+    if len(jax.devices()) > 1:
+        s = run_sharded(B=B, graph=g, p_batch=P)
+        rows.append(csv_row(
+            f"ppr_sharded/B{B}x{s['devices']}dev", s["sharded_us"],
+            f"single_us={s['single_us']:.1f} speedup={s['speedup']:.2f}x "
+            f"bitwise={s['bit_identical']} iters={s['iterations']}"))
     return rows
 
 
+def run_sharded(B: int = 16, *, n: int = 20_000, m: int = 160_000,
+                xi: float = 1e-10, seed: int = 7, graph=None,
+                p_batch=None) -> dict:
+    """Single-device vs mesh-sharded engine serving on the same seed stream.
+
+    Returns the JSON-ready comparison dict; the mesh is the (n_dev, 1)
+    batch-parallel grid over everything ``jax.devices()`` offers, so under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 this is the CI
+    distributed-serving baseline.  Bit-identity of the two answers is part
+    of the record — a perf row that silently changed numerics is worthless.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        raise SystemExit(
+            "run_sharded needs > 1 device — a (1, 1) comparison would "
+            "record a baseline that never sharded anything; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    g = graph if graph is not None else web_graph(n, m, dangling_frac=0.15,
+                                                  seed=seed)
+    if p_batch is None:
+        seeds = np.random.default_rng(0).choice(g.n, size=B, replace=False)
+        P = one_hot_personalizations(g, seeds)
+    else:
+        P = p_batch
+    cfg = BatchConfig(xi=xi)
+
+    e_single = PageRankEngine(g, EnginePlan(step_impl="dense"))
+    r_single, t_single = timed(e_single.solve_batch, P, cfg, repeats=2)
+
+    e_mesh = PageRankEngine(g, EnginePlan(step_impl="dense",
+                                          mesh=(n_dev, 1)))
+    r_mesh, t_mesh = timed(e_mesh.solve_batch, P, cfg, repeats=2)
+
+    return dict(
+        bench="ppr_sharded",
+        graph=dict(n=g.n, m=g.m),
+        batch=B,
+        seed_stream=dict(rng_seed=0, graph_seed=seed),
+        xi=xi,
+        devices=n_dev,
+        mesh=[n_dev, 1],
+        platform=jax.default_backend(),
+        single_us=t_single * 1e6,
+        sharded_us=t_mesh * 1e6,
+        speedup=t_single / max(t_mesh, 1e-12),
+        qps_sharded=B / max(t_mesh, 1e-12),
+        iterations=int(r_mesh.iterations),
+        bit_identical=bool(jax.numpy.array_equal(r_single.pi, r_mesh.pi)),
+        method=r_mesh.method,
+        note="simulated host mesh: all devices share one CPU and the "
+             "(R, 1) layout replicates the edge stream, so total CPU work "
+             "RISES ~Rx while per-device work drops 1/R — expect speedup "
+             "< 1 here; the record is the correctness + overhead baseline "
+             "(bit_identical must stay true), realized speedup needs real "
+             "multi-device hardware",
+    )
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded-json", default=None, metavar="PATH",
+                    help="write the run_sharded() comparison to PATH "
+                         "instead of running the full row matrix")
+    args = ap.parse_args()
+    if args.sharded_json:
+        out = run_sharded()
+        with open(args.sharded_json, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(json.dumps(out, indent=2))
+    else:
+        print("\n".join(run()))

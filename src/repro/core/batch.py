@@ -42,7 +42,16 @@ __all__ = ["BatchSolverResult", "ita_batch", "power_method_batch",
 
 @dataclasses.dataclass
 class BatchSolverResult:
-    """Uniform return type for the batched solvers; ``pi`` is [B, n]."""
+    """Uniform return type for the batched solvers.
+
+    ``pi`` is float[B, n] (the solve's ``dtype``, default float64), one
+    normalized ranking row per personalization row; ``iterations`` is the
+    shared synchronous-round count (all rows step together), ``residual``
+    the stopping threshold the solve ran to (``xi`` for ITA, max row
+    residual for power), ``converged`` whether every row met it within
+    ``max_iter``, and ``method`` a tag like ``"ita_batch[dense]"`` naming
+    solver family and ``step_impl``.
+    """
 
     pi: jnp.ndarray
     iterations: int
@@ -61,7 +70,15 @@ class BatchSolverResult:
 
 
 def one_hot_personalizations(g: Graph, seeds, dtype=jnp.float64) -> jnp.ndarray:
-    """[B, n] matrix of single-seed preference vectors (classic PPR)."""
+    """[B, n] matrix of single-seed preference vectors (classic PPR).
+
+    ``seeds`` is any int sequence/array of vertex ids (B entries; an empty
+    list yields a valid [0, n] batch).  Duplicates are allowed — identical
+    rows solve to identical rankings — and a dangling seed is legal: its
+    row's mass never transmits, so the solve returns the seed's own
+    one-hot as the ranking (the paper's V_D semantics).  Returns
+    ``dtype``[B, n], each row exactly one 1.0.
+    """
     seeds = jnp.asarray(seeds, jnp.int32)
     return jax.nn.one_hot(seeds, g.n, dtype=dtype)
 
@@ -108,7 +125,18 @@ def ita_batch(
     step_impl: str = "dense",
     ctx=None,
 ) -> BatchSolverResult:
-    """Multi-source ITA: ``p_batch`` is [B, n], one preference row per query."""
+    """Multi-source ITA: ``p_batch`` is [B, n], one preference row per query.
+
+    ``p_batch`` may be any float dtype (promoted to ``dtype``, default
+    float64); initial information is ``p · n`` per the paper's uniform
+    h0 = 1 convention.  ``step_impl`` accepts every registered backend —
+    "dense", "ell" (jittable: the solve runs as one device-resident
+    ``while_loop``) or "frontier" (host-driven loop, same numerics).
+    ``ctx`` injects a prepared backend context (an engine session);
+    ``None`` prepares one in place.  Returns a :class:`BatchSolverResult`
+    with ``pi`` ``dtype``[B, n]; for the mesh-sharded form of this solve
+    see ``core/distributed.ita_batch_distributed``.
+    """
     backend = get_step_impl(step_impl)
     if ctx is None:
         ctx = backend.prepare(g)
@@ -174,6 +202,15 @@ def power_method_batch(
     step_impl: str = "dense",
     ctx=None,
 ) -> BatchSolverResult:
+    """Batched power iteration with per-row freezing.
+
+    ``p_batch`` float[B, n] → :class:`BatchSolverResult` with ``pi``
+    ``dtype``[B, n].  Rows freeze the iteration their own L2 residual
+    crosses ``tol`` (the sequential stopping rule).  ``step_impl``:
+    jittable backends only ("dense", "ell"); "frontier" re-routes to
+    "dense" because every vertex stays active under the power iteration,
+    so frontier compression buys nothing.
+    """
     backend = get_step_impl(step_impl)
     if not backend.jittable:
         # every vertex stays active under the power iteration — frontier
@@ -200,7 +237,15 @@ _BATCH_SOLVERS = {"ita": ita_batch, "power": power_method_batch}
 
 def solve_pagerank_batch(g: Graph, p_batch: jnp.ndarray, method: str = "ita",
                          **kwargs) -> BatchSolverResult:
-    """Solve PR(P, c, p_u) for every row p_u of ``p_batch`` in one pass."""
+    """Solve PR(P, c, p_u) for every row p_u of ``p_batch`` in one pass.
+
+    ``p_batch`` must be float[B, n]; ``method`` is "ita" or "power" and
+    ``kwargs`` are forwarded to :func:`ita_batch` / :func:`power_method_batch`
+    (``c``, ``xi``/``tol``, ``max_iter``, ``dtype``, ``step_impl``,
+    ``ctx``).  The session form is ``PageRankEngine.solve_batch`` with a
+    :class:`~repro.core.solver_config.BatchConfig`, which adds mesh
+    sharding (``EnginePlan.mesh`` / ``BatchConfig.shard_batch``).
+    """
     if method not in _BATCH_SOLVERS:
         raise KeyError(f"unknown batch solver {method!r}; "
                        f"available: {sorted(_BATCH_SOLVERS)}")

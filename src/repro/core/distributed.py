@@ -21,13 +21,32 @@ Both return bit-identical results to ``core.ita`` (asserted in
 tests/test_distributed.py on an 8-device host mesh) because the schedule
 is the same synchronous frontier — only the data layout changes.
 
+Batched PPR (``ita_batch_distributed``): the serving shape.  A [B, n]
+    personalization batch is embarrassingly data-parallel in B, so the
+    batch axis shards over ``data`` and — optionally — the vertex axis
+    over ``model`` via the same :class:`Partition2D` edge blocks with
+    R = 1 (``graph/partition.partition_cols``).  The per-step schedule is
+    ``make_ita_2d_step``'s lifted to [B, n] state:
+
+        local segment-sum over the column edge block   [compute]
+        psum_scatter over "model"                      [B/R · n/C each]
+
+    with the row all-gather of the single-vector layout replaced by batch
+    parallelism (rows never exchange — the data axis carries no per-step
+    collective at all).  With C == 1 the vertex axis stays whole and each
+    device simply runs the registered backend's ``push_batch`` on its
+    batch shard, so results are bit-identical to ``core.batch.ita_batch``
+    per backend (asserted in tests/test_batch_distributed.py).  See
+    docs/SHARDING.md for the layout diagrams and byte counts.
+
 ``build_pagerank_job`` exposes the 2-D step as a LoweringJob so the
 paper's own workload participates in the multi-pod dry-run + roofline.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import time
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
@@ -36,12 +55,70 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from ..graph.partition import Partition1D, Partition2D, partition_1d, partition_2d
+from ..graph.partition import (
+    Partition1D,
+    Partition2D,
+    partition_1d,
+    partition_2d,
+    partition_cols,
+)
 from ..graph.structure import Graph
+from .backends import get_step_impl
+from .batch import BatchSolverResult, _batch_ita_step
 from .metrics import SolverResult
 
 __all__ = ["ita_distributed_1d", "ita_distributed_2d", "build_pagerank_job",
-           "make_ita_2d_step"]
+           "make_ita_2d_step", "make_ita_batch_step", "ita_batch_distributed",
+           "resolve_mesh"]
+
+
+def resolve_mesh(spec, *, batch_axis: str = "data",
+                 col_axis: str = "model") -> Optional[Mesh]:
+    """Normalize a mesh request into a ``jax.sharding.Mesh`` (or ``None``).
+
+    Accepted forms of ``spec``:
+      * ``None``          — no mesh (single-device execution);
+      * a ``Mesh``        — used as-is (must carry ``batch_axis``; a missing
+                            ``col_axis`` is treated as size 1);
+      * ``"host"``        — all of ``jax.devices()`` in an (n_dev, 1) grid,
+                            the CI fallback that exercises sharding on
+                            ``--xla_force_host_platform_device_count``
+                            simulated devices;
+      * ``R`` / ``(R,)``  — R-way batch-parallel grid (R, 1);
+      * ``(R, C)``        — R-way batch × C-way vertex grid.
+
+    Raises ``ValueError`` when the requested grid needs more devices than
+    ``jax.devices()`` provides, or the shape is malformed.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, Mesh):
+        if batch_axis not in spec.axis_names:
+            raise ValueError(
+                f"mesh must carry a {batch_axis!r} axis for the batch "
+                f"dimension; got axes {spec.axis_names}")
+        return spec
+    if spec == "host":
+        spec = (len(jax.devices()), 1)
+    if isinstance(spec, int):
+        spec = (spec,)
+    try:
+        shape = tuple(int(x) for x in spec)
+    except (TypeError, ValueError):
+        raise ValueError(f"mesh spec must be None, 'host', a Mesh, an int or "
+                         f"a (R,) / (R, C) tuple; got {spec!r}") from None
+    if len(shape) == 1:
+        shape = (shape[0], 1)
+    if len(shape) != 2 or min(shape) < 1:
+        raise ValueError(f"mesh shape must be (R,) or (R, C) with positive "
+                         f"entries; got {spec!r}")
+    n_need, n_have = shape[0] * shape[1], len(jax.devices())
+    if n_need > n_have:
+        raise ValueError(f"mesh {shape} needs {n_need} devices but only "
+                         f"{n_have} are available (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=N for a "
+                         f"simulated host mesh)")
+    return jax.make_mesh(shape, (batch_axis, col_axis))
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +258,276 @@ def ita_distributed_2d(g: Graph, mesh: Mesh, *, c: float = 0.85,
     pi = jnp.asarray(pi_nat / pi_nat.sum())
     return SolverResult(pi=pi, iterations=it, residual=float(xi), ops=float("nan"),
                         converged=True, method="ita_2d")
+
+
+# ---------------------------------------------------------------------------
+# batched PPR: batch on "data", vertex optionally on "model"
+# ---------------------------------------------------------------------------
+def _ita_batch_2d_body(nr: int, c: float, xi: float, batch_axis: str,
+                       col_axis: str):
+    """The per-device body of one vertex-sharded batched ITA round.
+
+    Local shapes: H [B_loc, nc], src_blk/dst_blk [1, e], inv_deg [nc].
+    Shared by :func:`make_ita_batch_step` (one shard_mapped round) and the
+    fused while_loop in ``ita_batch_distributed``.
+    """
+    def step(H, PiBar, src_blk, dst_blk, inv_deg, nd):
+        src_e, dst_e = src_blk[0], dst_blk[0]
+        active = jnp.logical_and(H > xi, nd[None, :])
+        H_act = jnp.where(active, H, 0)
+        PiBar = PiBar + H_act
+        W = H_act * inv_deg[None, :] * c
+        Wp = jnp.concatenate([W, jnp.zeros((W.shape[0], 1), W.dtype)], axis=1)
+        contrib = Wp[:, src_e]                                 # [B_loc, e]
+        partial_r = jax.ops.segment_sum(contrib.T, dst_e,
+                                        num_segments=nr + 1)[:nr]  # [nr, B_loc]
+        # reduce over columns; each column keeps its vertex block
+        Y = jax.lax.psum_scatter(partial_r, col_axis, scatter_dimension=0,
+                                 tiled=True)                   # [nc, B_loc]
+        H = jnp.where(active, 0, H) + Y.T
+        n_active = jax.lax.psum(jnp.sum(active, dtype=jnp.int32),
+                                (batch_axis, col_axis))
+        return H, PiBar, n_active
+
+    return step
+
+
+def make_ita_batch_step(mesh: Mesh, part_shapes: dict, c: float, xi: float,
+                        batch_axis: str = "data", col_axis: str = "model"):
+    """Build the shard_map step for [B, n] batched ITA, vertex-sharded.
+
+    ``make_ita_2d_step``'s push schedule lifted to [B, n] state with the
+    row axis repurposed as the batch axis: the local masked segment-sum
+    and the ``psum_scatter`` over ``col_axis`` are unchanged, while the
+    single-vector layout's all-gather over rows disappears entirely —
+    batch rows are independent, so the batch axis moves zero bytes per
+    step.
+
+    part_shapes: dict(nr=) — static ints from ``partition_cols``
+    (nr == n_pad: dst indices are global).  shard_map operands:
+      H, PiBar      f64[B_pad, n_pad]  P(batch_axis, col_axis)
+      src, dst      i32[C, e_pad]      P(col_axis, None) (src local to the
+                                       column block, dst global)
+      inv_deg, nd   [n_pad]            P(col_axis)
+    Returns ``(H', PiBar', n_active)`` with n_active replicated.
+    """
+    state_spec = P(batch_axis, col_axis)
+    edge_spec = P(col_axis, None)
+    vec_spec = P(col_axis)
+    return shard_map(
+        _ita_batch_2d_body(part_shapes["nr"], c, xi, batch_axis, col_axis),
+        mesh=mesh,
+        in_specs=(state_spec, state_spec, edge_spec, edge_spec, vec_spec,
+                  vec_spec),
+        out_specs=(state_spec, state_spec, P()),
+        check_rep=False,
+    )
+
+
+# The loop builders are lru_cached on their static identity (mesh objects
+# hash by device grid + axis names, backend instances by identity) so a
+# serving engine's repeated solve_batch calls reuse ONE traced program:
+# rebuilding jit(shard_map(...)) per query would retrace every time.  The
+# whole quiescence loop runs device-resident inside the shard_map — no
+# per-iteration host round-trip — mirroring core/batch._ita_batch_loop.
+@lru_cache(maxsize=None)
+def _batch_dp_loop(mesh: Mesh, backend, c: float, xi: float, max_iter: int,
+                   batch_axis: str):
+    """Batch-only sharding: each device runs the *registered backend's*
+    ``push_batch`` on its batch shard against replicated edge operands.
+
+    Because every batch row's arithmetic is untouched (same ops, same edge
+    order, rows never interact), results are bit-identical per backend to
+    the single-device ``ita_batch`` — the property the engine's sharded
+    serving path is tested for.
+    """
+    state_spec = P(batch_axis, None)
+    rep = P()
+
+    def local_loop(g, ctx, H0, inv_deg, nd):
+        def cond(state):
+            _, _, n_active, it = state
+            return jnp.logical_and(n_active > 0, it < max_iter)
+
+        def body(state):
+            H, PiBar, _, it = state
+            H, PiBar, n_loc = _batch_ita_step(backend, g, ctx, H, PiBar, c,
+                                              xi, inv_deg, nd)
+            return H, PiBar, jax.lax.psum(n_loc, batch_axis), it + 1
+
+        init = (H0, jnp.zeros_like(H0), jnp.asarray(1, jnp.int32),
+                jnp.asarray(0, jnp.int32))
+        return jax.lax.while_loop(cond, body, init)
+
+    return jax.jit(shard_map(
+        local_loop, mesh=mesh,
+        in_specs=(rep, rep, state_spec, rep, rep),
+        out_specs=(state_spec, state_spec, rep, rep),
+        check_rep=False,
+    ))
+
+
+@lru_cache(maxsize=None)
+def _batch_2d_loop(mesh: Mesh, nr: int, c: float, xi: float, max_iter: int,
+                   batch_axis: str, col_axis: str):
+    """Fused quiescence loop around :func:`_ita_batch_2d_body`."""
+    state_spec = P(batch_axis, col_axis)
+    edge_spec = P(col_axis, None)
+    vec_spec = P(col_axis)
+    step = _ita_batch_2d_body(nr, c, xi, batch_axis, col_axis)
+
+    def local_loop(H0, src_blk, dst_blk, inv_deg, nd):
+        def cond(state):
+            _, _, n_active, it = state
+            return jnp.logical_and(n_active > 0, it < max_iter)
+
+        def body(state):
+            H, PiBar, _, it = state
+            H, PiBar, n_active = step(H, PiBar, src_blk, dst_blk, inv_deg, nd)
+            return H, PiBar, n_active, it + 1
+
+        init = (H0, jnp.zeros_like(H0), jnp.asarray(1, jnp.int32),
+                jnp.asarray(0, jnp.int32))
+        return jax.lax.while_loop(cond, body, init)
+
+    return jax.jit(shard_map(
+        local_loop, mesh=mesh,
+        in_specs=(state_spec, edge_spec, edge_spec, vec_spec, vec_spec),
+        out_specs=(state_spec, state_spec, P(), P()),
+        check_rep=False,
+    ))
+
+
+def _partition_cols_cached(g: Graph, C: int):
+    """Per-graph cache for the column partition (same idiom as Graph.ell:
+    host-side O(m) conversion paid once per (graph, C), invisible to the
+    pytree)."""
+    cache = getattr(g, "_part_cols_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(g, "_part_cols_cache", cache)
+    if C not in cache:
+        cache[C] = partition_cols(g, C)
+    return cache[C]
+
+
+def _batch_2d_operands_cached(g: Graph, mesh: Mesh, C: int, dtype,
+                              col_axis: str):
+    """Device-placed vertex-sharded operands, cached per (graph, grid).
+
+    A serving engine calls ``ita_batch_distributed`` per query; the O(m)
+    edge blocks and O(n) mask vectors must be uploaded and sharded ONCE,
+    not per solve (the prepare-once contract).  Keyed on (mesh, C, dtype)
+    in the same per-graph cache as the partition itself.
+    """
+    part = _partition_cols_cached(g, C)
+    cache = g._part_cols_cache  # created by the call above
+    key = (mesh, C, jnp.dtype(dtype).name, col_axis)
+    if key not in cache:
+        deg = np.asarray(g.out_deg)
+        inv_nat = np.zeros(part.n_pad, np.float64)
+        inv_nat[: g.n] = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
+        nd_nat = np.zeros(part.n_pad, bool)
+        nd_nat[: g.n] = deg > 0
+        edge_sh = NamedSharding(mesh, P(col_axis, None))
+        vec_sh = NamedSharding(mesh, P(col_axis))
+        cache[key] = (
+            jax.device_put(jnp.asarray(part.src_local[0]), edge_sh),
+            jax.device_put(jnp.asarray(part.dst_local[0]), edge_sh),
+            jax.device_put(jnp.asarray(inv_nat.astype(dtype)), vec_sh),
+            jax.device_put(jnp.asarray(nd_nat), vec_sh),
+        )
+    return part, cache[key]
+
+
+def ita_batch_distributed(
+    g: Graph,
+    p_batch,
+    mesh: Mesh,
+    *,
+    c: float = 0.85,
+    xi: float = 1e-10,
+    max_iter: int = 10_000,
+    dtype=jnp.float64,
+    step_impl: str = "dense",
+    ctx=None,
+    batch_axis: str = "data",
+    col_axis: str = "model",
+) -> BatchSolverResult:
+    """Mesh-sharded multi-source ITA: ``p_batch`` is [B, n], one row per query.
+
+    Two layouts, chosen by the mesh geometry:
+
+      * C == 1 (or no ``col_axis``): **batch-parallel**.  B shards over
+        ``batch_axis``; edges, masks and the backend ctx are replicated and
+        each device runs ``step_impl``'s own ``push_batch`` on its rows.
+        Any *jittable* backend ("dense", "ell", or a registered custom
+        layout) is accepted and the result is bit-identical to
+        :func:`repro.core.batch.ita_batch` with the same backend.
+      * C > 1: **batch × vertex**.  Additionally shards the [B, n] state
+        and the edge blocks over ``col_axis`` via ``partition_cols`` (per-
+        device state is B/R × n/C) with the psum_scatter schedule of
+        ``make_ita_2d_step``.  The cross-column reduction regroups the
+        float sums, so agreement with the single-device solve is to solver
+        tolerance (~xi), not bitwise; only the dense segment-sum schedule
+        is implemented (``step_impl`` must be "dense").
+
+    B is padded up to a multiple of R with all-zero rows (quiet from step
+    0 — they change neither the iteration count nor any real row).
+    """
+    R = mesh.shape[batch_axis]
+    C = mesh.shape[col_axis] if col_axis in mesh.axis_names else 1
+    p_batch = jnp.asarray(p_batch)
+    if p_batch.ndim != 2 or p_batch.shape[1] != g.n:
+        raise ValueError(f"p_batch must be [B, n={g.n}], got {p_batch.shape}")
+    B = int(p_batch.shape[0])
+    B_pad = max(((B + R - 1) // R) * R, R)
+    H0 = (p_batch.astype(dtype) * g.n).astype(dtype)
+    if B_pad != B:
+        H0 = jnp.concatenate(
+            [H0, jnp.zeros((B_pad - B, g.n), dtype)], axis=0)
+
+    t0 = time.perf_counter()
+    if C == 1:
+        backend = get_step_impl(step_impl)
+        if not backend.jittable:
+            raise ValueError(
+                f"step_impl={step_impl!r} is host-driven and cannot run "
+                f"under shard_map; use a jittable backend (e.g. 'dense')")
+        if ctx is None:
+            ctx = backend.prepare(g)
+        run = _batch_dp_loop(mesh, backend, float(c), float(xi),
+                             int(max_iter), batch_axis)
+        H0 = jax.device_put(H0, NamedSharding(mesh, P(batch_axis, None)))
+        inv_deg = g.inv_out_deg(dtype)
+        nd = jnp.logical_not(g.dangling_mask)
+        H, PiBar, n_active, it = run(g, ctx, H0, inv_deg, nd)
+        method = f"ita_batch_dist[{step_impl}|{R}x1]"
+    else:
+        if step_impl not in (None, "dense"):
+            raise ValueError(
+                f"vertex-sharded batched ITA (C={C}) implements the dense "
+                f"segment-sum schedule only; got step_impl={step_impl!r}")
+        part, (src_d, dst_d, ideg, nd) = _batch_2d_operands_cached(
+            g, mesh, C, dtype, col_axis)
+        run = _batch_2d_loop(mesh, part.nr, float(c), float(xi),
+                             int(max_iter), batch_axis, col_axis)
+        if part.n_pad != g.n:
+            H0 = jnp.concatenate(
+                [H0, jnp.zeros((B_pad, part.n_pad - g.n), dtype)], axis=1)
+        H0 = jax.device_put(H0, NamedSharding(mesh, P(batch_axis, col_axis)))
+        H, PiBar, n_active, it = run(H0, src_d, dst_d, ideg, nd)
+        method = f"ita_batch_dist[dense|{R}x{C}]"
+
+    it = int(it)
+    PiBar = PiBar + H
+    Pi = PiBar[:B, : g.n]
+    Pi = Pi / jnp.sum(Pi, axis=1, keepdims=True)
+    Pi = jax.block_until_ready(Pi)
+    return BatchSolverResult(
+        pi=Pi, iterations=int(it), residual=float(xi),
+        converged=bool(int(n_active) == 0), method=method, batch=B,
+        wall_time_s=time.perf_counter() - t0)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,14 @@ Prepare phase (one-time, at construction and after ``update``):
     counts, materialized on device;
   * backend selection (``EnginePlan.step_impl="auto"`` resolves per
     platform) and its per-graph context: ``Graph.ell()`` bucketing for the
-    Pallas kernel, the CSR-by-src plan for frontier compression.
+    Pallas kernel, the CSR-by-src plan for frontier compression;
+  * mesh resolution (``EnginePlan.mesh``): the graph operands and backend
+    ctx are replicated onto the device grid once with ``NamedSharding``,
+    after which ``solve_batch``/``topk`` shard every [B, n] query's batch
+    axis over "data" (and, on an (R, C) grid, the vertex axis over
+    "model") via ``core/distributed.ita_batch_distributed`` — see
+    docs/SHARDING.md.  Batch-parallel serving stays bit-identical to the
+    unsharded engine (tests/test_batch_distributed.py).
 
 Queries reuse the prepared context verbatim — the engine calls the very
 same solver functions as the legacy API with ``ctx=`` threaded through, so
@@ -44,6 +51,7 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from ..graph.structure import Graph, apply_edge_delta
 from .backends import get_step_impl, resolve_step_impl
@@ -54,6 +62,7 @@ from .batch import (
     one_hot_personalizations,
     power_method_batch,
 )
+from .distributed import ita_batch_distributed, resolve_mesh
 from .dynamic import ita_incremental, ita_residual_state
 from .metrics import SolverResult
 from .solver_config import BatchConfig, SolverConfig, make_config
@@ -69,6 +78,16 @@ class EnginePlan:
     here is resolved once at prepare time and becomes part of the compiled
     state's identity.  ``step_impl="auto"`` picks the platform default
     (bucketed-ELL on TPU where the Mosaic kernel pays, dense elsewhere).
+
+    ``mesh`` asks the engine to serve batched queries sharded over a
+    device grid: ``None`` (single device), ``"host"`` (all ``jax.devices()``
+    as an (n_dev, 1) batch-parallel grid — the CI fallback that works on
+    simulated host devices), ``(R,)`` / ``(R, C)`` shapes, or a prebuilt
+    ``jax.sharding.Mesh`` with a "data" (and optionally "model") axis.
+    Constraints, enforced at prepare time: the backend must be jittable
+    (the host-driven "frontier" cannot run under shard_map), and C-way
+    vertex sharding (C > 1) requires ``step_impl="dense"`` — the only
+    schedule the vertex-sharded pass implements.
     """
 
     step_impl: Optional[str] = "auto"
@@ -78,6 +97,7 @@ class EnginePlan:
     default_method: str = "ita"
     c: float = 0.85          # damping used by the update/residual machinery
     update_xi: float = 1e-12  # accuracy the maintained residual state holds
+    mesh: Any = None          # None | "host" | (R,) | (R, C) | Mesh
 
 
 class TopKResult(NamedTuple):
@@ -105,7 +125,9 @@ class PageRankEngine:
     # prepare phase
     # ------------------------------------------------------------------ #
     def _prepare(self, g: Graph) -> None:
-        """One-time per-graph work: classify, bucket, build backend ctx."""
+        """One-time per-graph work: classify, bucket, build backend ctx,
+        and (when the plan carries a mesh) lay the prepared state out on
+        the device grid once so every query reuses the placement."""
         self.graph = g
         self.step_impl = resolve_step_impl(self.plan.step_impl)
         self.backend = get_step_impl(self.step_impl)
@@ -123,6 +145,29 @@ class PageRankEngine:
                               row_align=self.plan.row_align)
         else:
             self._ctx = self.backend.prepare(g)
+        self.mesh = resolve_mesh(self.plan.mesh)
+        self._mesh_shape = None
+        if self.mesh is not None:
+            if not self.backend.jittable:
+                raise ValueError(
+                    f"EnginePlan(mesh=...) needs a jittable backend; "
+                    f"{self.step_impl!r} is host-driven and cannot run "
+                    f"under shard_map")
+            C = (self.mesh.shape["model"]
+                 if "model" in self.mesh.axis_names else 1)
+            # normalized (R, C) grid — a user-supplied single-axis Mesh
+            # has a 1-length devices.shape, so derive from the axes.
+            self._mesh_shape = (self.mesh.shape["data"], C)
+            if C > 1 and self.step_impl != "dense":
+                raise ValueError(
+                    f"vertex sharding (mesh model axis = {C}) implements "
+                    f"the dense schedule only; prepare the engine with "
+                    f"step_impl='dense', not {self.step_impl!r}")
+            # replicate the prepared context and graph operands onto the
+            # grid once; shard_map then never reshards them per query.
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            self._ctx = jax.device_put(self._ctx, rep)
+            self.graph = jax.device_put(g, rep)
         self._compiled.clear()  # traces close over the old graph's buffers
         self.prepare_count += 1
 
@@ -134,6 +179,7 @@ class PageRankEngine:
             n_unreferenced=self.n_unreferenced,
             step_impl=self.step_impl,
             jittable=self.backend.jittable,
+            mesh=self._mesh_shape,
             prepare_count=self.prepare_count,
             has_residual_state=self._state is not None,
         )
@@ -145,6 +191,15 @@ class PageRankEngine:
                 f"config requests step_impl={want!r} but this engine "
                 f"prepared {self.step_impl!r}; construct the engine with "
                 f"EnginePlan(step_impl={want!r}) instead")
+        want_mesh = getattr(cfg, "mesh_shape", None)
+        if want_mesh is not None:
+            shape = want_mesh if len(want_mesh) == 2 else (want_mesh[0], 1)
+            have = self._mesh_shape
+            if shape != have:
+                raise ValueError(
+                    f"config requests mesh_shape={shape} but this engine "
+                    f"prepared mesh={have}; construct the engine with "
+                    f"EnginePlan(mesh={shape}) instead")
 
     # ------------------------------------------------------------------ #
     # queries
@@ -174,7 +229,21 @@ class PageRankEngine:
 
     def solve_batch(self, p_batch: jnp.ndarray,
                     cfg: Optional[BatchConfig] = None) -> BatchSolverResult:
-        """Solve a whole [B, n] personalization batch in one device pass."""
+        """Solve a whole [B, n] personalization batch in one device pass.
+
+        ``p_batch`` is float[B, n] (any float dtype; promoted to
+        ``cfg.dtype``, default float64), one preference row per query;
+        returns a :class:`~repro.core.batch.BatchSolverResult` whose
+        ``pi`` is [B, n] with each row summing to 1.
+
+        When the engine holds a mesh (``EnginePlan.mesh``) and
+        ``cfg.shard_batch`` is true, ITA batches run sharded through
+        ``ita_batch_distributed`` — batch axis over "data", vertex axis
+        over "model" on an (R, C) grid — and batch-parallel results are
+        bit-identical to the unsharded path.  Power batches and
+        ``shard_batch=False`` queries fall back to the single-device pass
+        against the same prepared ctx.
+        """
         cfg = cfg or BatchConfig(dtype=self.plan.dtype)
         if not isinstance(cfg, BatchConfig):
             raise TypeError(f"solve_batch takes a BatchConfig, "
@@ -184,6 +253,12 @@ class PageRankEngine:
         if p_batch.ndim != 2 or p_batch.shape[1] != self.graph.n:
             raise ValueError(f"p_batch must be [B, n={self.graph.n}], "
                              f"got {p_batch.shape}")
+        if (self.mesh is not None and cfg.shard_batch
+                and cfg.batch_method == "ita"):
+            return ita_batch_distributed(
+                self.graph, p_batch, self.mesh, c=cfg.c, xi=cfg.xi,
+                max_iter=cfg.max_iter, dtype=cfg.dtype,
+                step_impl=self.step_impl, ctx=self._ctx)
         if (self._donate and cfg.batch_method == "ita"
                 and self.backend.jittable):
             return self._solve_batch_donated(p_batch, cfg)
@@ -233,7 +308,11 @@ class PageRankEngine:
              cfg: Optional[BatchConfig] = None) -> TopKResult:
         """Serve PPR queries: per-source top-``k`` vertices and scores.
 
-        ``sources`` is a [B] vector of seed vertices (classic one-hot PPR).
+        ``sources`` is an int[B] vector of seed vertices (classic one-hot
+        PPR); returns a :class:`TopKResult` with ``indices`` int32 [B, k]
+        and ``scores`` ``plan.dtype`` [B, k], rows sorted by descending
+        score.  Runs through :meth:`solve_batch`, so an engine mesh
+        shards the underlying [B, n] pass transparently.
         """
         P = one_hot_personalizations(self.graph, sources,
                                      dtype=self.plan.dtype)

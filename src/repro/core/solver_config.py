@@ -142,8 +142,30 @@ class MonteCarloConfig(SolverConfig):
 class BatchConfig(SolverConfig):
     """A [B, n] multi-query solve (core/batch.py).
 
-    ``batch_method`` picks the batched solver family; ``xi`` applies to
-    "ita", ``tol`` to "power" — :meth:`kwargs_for` projects the right one.
+    Fields
+    ------
+    batch_method : {"ita", "power"}
+        Batched solver family.  ``xi`` applies to "ita", ``tol`` to
+        "power" — :meth:`kwargs_for` projects the right one onto the
+        chosen solver's signature.
+    step_impl : None | "auto" | "dense" | "frontier" | "ell"
+        Push backend request; ``None`` defers to the solver default
+        outside an engine and to the engine's prepared backend inside one.
+    mesh_shape : None | (R,) | (R, C)
+        Request that an engine serve this query on a device grid of that
+        shape (R-way batch sharding, C-way vertex sharding — see
+        ``core/distributed.ita_batch_distributed``).  The engine refuses a
+        config whose mesh_shape contradicts its ``EnginePlan.mesh``, the
+        same contract as ``step_impl``.  Normalized to a tuple at
+        construction; entries must be positive ints and C-way vertex
+        sharding requires the dense schedule.
+    shard_batch : bool
+        ``False`` opts this query out of an engine's mesh: the solve runs
+        single-device even when ``EnginePlan.mesh`` is set (useful for
+        tiny batches where the collective setup outweighs the win).
+
+    Operands are the [B, n] personalization rows passed to ``solve_batch``
+    (any float dtype; promoted to ``dtype``, default float64).
     """
 
     batch_method: str = "ita"
@@ -151,8 +173,29 @@ class BatchConfig(SolverConfig):
     tol: float = 1e-10
     max_iter: int = 10_000
     step_impl: Optional[str] = None
+    mesh_shape: Optional[tuple] = None
+    shard_batch: bool = True
 
     method: ClassVar[str] = "batch"
+
+    def __post_init__(self):
+        if not isinstance(self.shard_batch, bool):
+            raise ValueError(
+                f"shard_batch must be a bool, got {self.shard_batch!r}")
+        if self.mesh_shape is None:
+            return
+        try:
+            shape = tuple(int(x) for x in self.mesh_shape)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"mesh_shape must be None, (R,) or (R, C); got "
+                f"{self.mesh_shape!r}") from None
+        if len(shape) not in (1, 2) or min(shape) < 1:
+            raise ValueError(
+                f"mesh_shape must be (R,) or (R, C) with positive entries; "
+                f"got {self.mesh_shape!r}")
+        # normalized tuple keeps static_key() hashable for list inputs
+        object.__setattr__(self, "mesh_shape", shape)
 
 
 # method name (registry key) -> config class.  Traced variants share the

@@ -15,6 +15,14 @@ block-cyclic permutation q(i·nr + j·sub + s) = j·nc + i·sub + s (sub =
 n/(R·C)) chosen precisely so that psum_scatter chunks reassemble into
 contiguous column blocks — see core/distributed.py.
 
+Batched PPR (``partition_cols``): the [B, n] serving pass shards the batch
+over "data" and (optionally) the vertex axis over "model", so it needs the
+2-D edge blocks with a single row group — ``partition_2d(g, 1, C)``.  With
+R = 1 the block-cyclic permutation degenerates to the identity (i = 0, so
+q = j·sub + s = id), which is what lets the batched solver keep natural
+vertex order: psum_scatter chunks of the [n_pad] dst range ARE the
+contiguous column blocks.  ``partition_cols`` wraps that special case.
+
 Both partitioners are host-side numpy (rank-0 data-pipeline work) and
 produce static, padded per-device arrays.
 """
@@ -26,7 +34,8 @@ import numpy as np
 
 from .structure import Graph
 
-__all__ = ["Partition1D", "Partition2D", "partition_1d", "partition_2d"]
+__all__ = ["Partition1D", "Partition2D", "partition_1d", "partition_2d",
+           "partition_cols"]
 
 
 def _round_up(x: int, k: int) -> int:
@@ -131,3 +140,18 @@ def partition_2d(g: Graph, R: int, C: int, *, pad_factor: float = 1.05) -> Parti
     return Partition2D(src_local=src_out, dst_local=dst_out, perm=perm,
                        inv_perm=inv_perm, n=g.n, n_pad=n_pad, nr=nr, nc=nc,
                        sub=sub, e_pad=e_pad, R=R, C=C)
+
+
+def partition_cols(g: Graph, C: int, *, pad_factor: float = 1.05) -> Partition2D:
+    """Column-only edge partition for the batched-PPR pass.
+
+    ``partition_2d(g, 1, C)``: device column j owns every edge whose src
+    falls in vertex block [j·nc, (j+1)·nc); dst indices stay global
+    (nr == n_pad) and the layout permutation is the identity, so [B, n]
+    state needs no reordering on entry or exit.  See core/distributed.py
+    ``ita_batch_distributed`` for the consuming schedule.
+    """
+    part = partition_2d(g, 1, C, pad_factor=pad_factor)
+    assert np.array_equal(part.perm, np.arange(part.n_pad)), \
+        "R=1 column layout must be the identity permutation"
+    return part

@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m repro.launch.ppr_serve --dataset web-Google \
         --scale 0.02 --queries 256 --batch 16 --step-impl dense
     PYTHONPATH=src python -m repro.launch.ppr_serve --smoke
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.ppr_serve --smoke --mesh 8,1
 
 The millions-of-users shape from the ROADMAP, reduced to one host: a
 stream of personalized-PageRank requests (seed vertices, skewed toward
@@ -21,6 +23,13 @@ Loop structure mirrors ``launch/serve.py``'s prefill/decode split:
 
 On accelerators the engine's donated batched-ITA path updates the [B, n]
 information buffer in place across micro-batches.
+
+``--mesh R[,C]`` serves every micro-batch sharded over a device grid
+(``EnginePlan(mesh=(R, C))``): batch rows over the "data" axis, vertices
+over "model" when C > 1 — see docs/SHARDING.md.  The grid must fit
+``jax.devices()``; in CI that is the 8-device simulated host mesh
+(XLA_FLAGS=--xla_force_host_platform_device_count=8).  Answers are
+bit-identical to the unsharded engine on an (R, 1) grid.
 """
 from __future__ import annotations
 
@@ -63,6 +72,10 @@ def main(argv=None) -> int:
     ap.add_argument("--topk", type=int, default=5)
     ap.add_argument("--zipf", type=float, default=1.1,
                     help="query-skew exponent over in-degree rank; 0=uniform")
+    ap.add_argument("--mesh", default=None, metavar="R[,C]",
+                    help="serve sharded over an (R, C) device grid: batch "
+                         "rows on 'data', vertices on 'model' (C>1 needs "
+                         "--step-impl dense)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: tiny graph, short stream")
@@ -83,15 +96,28 @@ def main(argv=None) -> int:
     from ..core import BatchConfig, EnginePlan, PageRankEngine
     from ..graph import paper_dataset
 
+    mesh = None
+    if args.mesh is not None:
+        try:
+            mesh = tuple(int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error(f"--mesh must be R or R,C; got {args.mesh!r}")
+
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
     print(f"graph: {g.stats()}")
 
     # 1. prepare — the one-time session cost every query amortizes
     t0 = time.perf_counter()
     engine = PageRankEngine(g, EnginePlan(step_impl=args.step_impl,
-                                          c=args.c))
+                                          c=args.c, mesh=mesh))
     t_prepare = time.perf_counter() - t0
     print(f"engine: {engine.describe()}  prepare: {t_prepare*1e3:.1f} ms")
+    # only ITA batches run through the sharded pass; report what actually
+    # happens rather than what was requested
+    mesh_eff = engine.describe()["mesh"] if args.method == "ita" else None
+    if mesh is not None and mesh_eff is None:
+        print("warning: --mesh applies to method=ita only; "
+              "power batches run single-device")
 
     cfg = BatchConfig(batch_method=args.method, c=args.c, xi=args.xi,
                       tol=args.xi)
@@ -128,7 +154,7 @@ def main(argv=None) -> int:
     qps = answered / t_serve
     print(f"served {answered} queries in {len(lat)} micro-batches of {B} "
           f"(method={args.method}, step_impl={engine.step_impl}, "
-          f"zipf={args.zipf})")
+          f"mesh={mesh_eff}, zipf={args.zipf})")
     print(f"compile: {t_compile*1e3:.1f} ms   batch p50/p99: "
           f"{np.percentile(lat_ms, 50):.1f}/{np.percentile(lat_ms, 99):.1f} ms"
           f"   per-query p50: {np.percentile(lat_ms, 50)/B:.2f} ms   "

@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Intra-repo markdown link checker (stdlib only; used by the CI docs job).
+
+    python tools/check_links.py README.md docs
+
+Checks every ``[text](target)`` in the given markdown files (directories
+are scanned for ``*.md``) whose target is a relative path: the file must
+exist relative to the markdown file's directory.  External schemes
+(http/https/mailto), pure anchors (``#...``) and absolute paths are
+skipped; a ``path#anchor`` target is checked for the path part only.
+Exits 1 listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target captured up to the closing paren; images too.
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_md_files(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            raise SystemExit(f"not a markdown file or directory: {a}")
+    if not files:
+        raise SystemExit("no markdown files found")
+    return files
+
+
+def check_file(md: Path) -> list[str]:
+    broken = []
+    text = md.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            if target.startswith("/"):
+                continue  # absolute paths are not repo links
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                broken.append(f"{md}:{lineno}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    files = iter_md_files(argv or ["README.md", "docs"])
+    broken: list[str] = []
+    for md in files:
+        broken.extend(check_file(md))
+    for b in broken:
+        print(b)
+    print(f"checked {len(files)} markdown file(s): "
+          f"{'FAIL' if broken else 'ok'} ({len(broken)} broken)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
