@@ -23,6 +23,15 @@ Three questions this answers on any hardware:
      "devices" share one CPU and the (R, 1) layout replicates the edge
      stream, so speedup < 1 is expected — the row tracks correctness
      (bit_identical) + overhead, not speedup, which needs real devices.
+  5. Query-plane overhead — ``engine.run(query)`` (plan + envelope around
+     the same compute) vs. the direct solver call with the engine's
+     prepared ctx, which is exactly what the pre-redesign methods
+     executed.  ``--query-plan-json PATH`` records it
+     (``benchmarks/BENCH_query_plan.json`` is the committed baseline);
+     the acceptance bar is overhead ≤ 2%.
+
+Committed ``BENCH_*.json`` baselines are schema-checked in CI by
+``benchmarks/check_bench_schema.py``.
 
 CPU wall-clock caveats from benchmarks/common.py apply (interpret-mode
 Pallas is Python-slow by construction); iteration/op counts transfer.
@@ -181,6 +190,63 @@ def run_sharded(B: int = 16, *, n: int = 20_000, m: int = 160_000,
     )
 
 
+def run_query_plan(B: int = 16, *, n: int = 20_000, m: int = 160_000,
+                   xi: float = 1e-10, seed: int = 7) -> dict:
+    """``engine.run(query)`` vs. the direct solver call, same prepared ctx.
+
+    The direct side is the module-level solver with the engine's prepared
+    backend context threaded in — bit-for-bit the compute the legacy
+    methods drove before the query plane existed.  The run side adds
+    planning + envelope wrapping; the committed bar is ≤ 2% overhead.
+    Negative overhead just means the difference drowned in timer noise.
+    """
+    from repro.core import PPRQuery, RankQuery, ita_batch
+
+    g = web_graph(n, m, dangling_frac=0.15, seed=seed)
+    seeds = np.random.default_rng(0).choice(g.n, size=B, replace=False)
+    P = one_hot_personalizations(g, seeds)
+    cfg = BatchConfig(xi=xi)
+    rank_cfg = ItaConfig(xi=xi)
+    engine = PageRankEngine(g, EnginePlan(step_impl="dense"))
+
+    # batched PPR: direct ita_batch(ctx=prepared) vs run(PPRQuery)
+    rb_direct, t_direct = timed(
+        ita_batch, g, P, xi=xi, step_impl="dense", ctx=engine._ctx,
+        repeats=3)
+    rb_run, t_run = timed(
+        lambda: engine.run(PPRQuery(p_batch=P, cfg=cfg)).result, repeats=3)
+    # single rank: direct ita(ctx=prepared) vs run(RankQuery)
+    r_direct, t_rank_direct = timed(
+        ita, g, xi=xi, step_impl="dense", ctx=engine._ctx, repeats=3)
+    r_run, t_rank_run = timed(
+        lambda: engine.run(RankQuery(rank_cfg)).result, repeats=3)
+
+    overhead = (t_run / max(t_direct, 1e-12) - 1.0) * 100.0
+    rank_overhead = (t_rank_run / max(t_rank_direct, 1e-12) - 1.0) * 100.0
+    plan_text = engine.plan(PPRQuery(p_batch=P, cfg=cfg)).explain()
+    return dict(
+        bench="query_plan",
+        graph=dict(n=g.n, m=g.m),
+        batch=B,
+        xi=xi,
+        platform=jax.default_backend(),
+        direct_us=t_direct * 1e6,
+        run_us=t_run * 1e6,
+        overhead_pct=overhead,
+        rank_direct_us=t_rank_direct * 1e6,
+        rank_run_us=t_rank_run * 1e6,
+        rank_overhead_pct=rank_overhead,
+        within_2pct=bool(overhead <= 2.0 and rank_overhead <= 2.0),
+        bit_identical=bool(
+            jax.numpy.array_equal(rb_direct.pi, rb_run.pi)
+            and jax.numpy.array_equal(r_direct.pi, r_run.pi)),
+        plan=plan_text.splitlines()[0],
+        note="run side = plan + envelope around the identical prepared-ctx "
+             "compute; best-of-3 wall times, CPU caveats from "
+             "benchmarks/common.py apply",
+    )
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -188,10 +254,19 @@ if __name__ == "__main__":
     ap.add_argument("--sharded-json", default=None, metavar="PATH",
                     help="write the run_sharded() comparison to PATH "
                          "instead of running the full row matrix")
+    ap.add_argument("--query-plan-json", default=None, metavar="PATH",
+                    help="write the run_query_plan() engine.run-overhead "
+                         "comparison to PATH instead of the row matrix")
     args = ap.parse_args()
     if args.sharded_json:
         out = run_sharded()
         with open(args.sharded_json, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(json.dumps(out, indent=2))
+    elif args.query_plan_json:
+        out = run_query_plan()
+        with open(args.query_plan_json, "w") as f:
             json.dump(out, f, indent=2)
             f.write("\n")
         print(json.dumps(out, indent=2))

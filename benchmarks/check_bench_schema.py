@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Validate committed ``benchmarks/BENCH_*.json`` baselines (CI docs job).
+
+    python benchmarks/check_bench_schema.py [FILES...]
+
+Stdlib-only, so CI can run it before installing anything.  Every baseline
+must be valid JSON carrying the common keys plus the required keys of its
+``bench`` family below.  A baseline whose ``bench`` name has no schema
+fails — extend :data:`SCHEMAS` in the same PR that adds a new family, so
+the committed record set stays self-describing.  Exits 1 listing every
+violation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+# keys every baseline carries, whatever its family
+REQUIRED_COMMON = ("bench", "platform")
+
+# bench family -> required keys (beyond the common ones)
+SCHEMAS: dict[str, tuple] = {
+    "ppr_sharded": (
+        "graph", "batch", "seed_stream", "xi", "devices", "mesh",
+        "single_us", "sharded_us", "speedup", "qps_sharded", "iterations",
+        "bit_identical", "method", "note",
+    ),
+    "query_plan": (
+        "graph", "batch", "xi", "direct_us", "run_us", "overhead_pct",
+        "within_2pct", "rank_direct_us", "rank_run_us",
+        "rank_overhead_pct", "bit_identical", "plan", "note",
+    ),
+}
+
+# per-key type expectations (applied when the key is present)
+_TYPES = {
+    "bench": str, "platform": str, "graph": dict, "batch": int,
+    "devices": int, "mesh": list, "iterations": int,
+    "bit_identical": bool, "within_2pct": bool, "method": str,
+    "note": str, "plan": str,
+}
+
+
+def check_file(path: Path) -> list[str]:
+    problems = []
+    try:
+        data = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/invalid JSON ({e})"]
+    if not isinstance(data, dict):
+        return [f"{path}: top level must be a JSON object"]
+    for k in REQUIRED_COMMON:
+        if k not in data:
+            problems.append(f"{path}: missing common key {k!r}")
+    bench = data.get("bench")
+    if bench is not None:
+        if bench not in SCHEMAS:
+            problems.append(
+                f"{path}: unknown bench family {bench!r} — add its "
+                f"required keys to SCHEMAS (known: {sorted(SCHEMAS)})")
+        else:
+            for k in SCHEMAS[bench]:
+                if k not in data:
+                    problems.append(
+                        f"{path}: bench {bench!r} missing required key {k!r}")
+    for k, t in _TYPES.items():
+        if k in data and not isinstance(data[k], t):
+            problems.append(
+                f"{path}: key {k!r} must be {t.__name__}, "
+                f"got {type(data[k]).__name__}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = sorted(Path(__file__).resolve().parent.glob("BENCH_*.json"))
+    if not files:
+        print("no BENCH_*.json baselines found")
+        return 1
+    problems = []
+    for f in files:
+        problems.extend(check_file(f))
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} baseline(s): "
+          f"{'FAIL' if problems else 'ok'} ({len(problems)} problem(s))")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -10,7 +10,10 @@ from .api import (
 )
 from .backends import (
     STEP_IMPLS,
+    BackendCapabilities,
+    SolverBackend,
     StepBackend,
+    choose_backend,
     get_step_impl,
     register_step_impl,
     resolve_step_impl,
@@ -29,6 +32,16 @@ from .metrics import SolverResult, err_max_rel, res_l2
 from .monte_carlo import monte_carlo
 from .power import power_method, power_method_traced, power_step
 from .propagate import dangling_mass, push_weighted, spmv_p
+from .query import (
+    BatchQuery,
+    DeltaQuery,
+    ExecutionPlan,
+    PPRQuery,
+    Query,
+    RankQuery,
+    ResultEnvelope,
+    TopKQuery,
+)
 from .solver_config import (
     BatchConfig,
     ForwardPushConfig,
@@ -39,16 +52,18 @@ from .solver_config import (
 )
 
 __all__ = [
-    "BatchConfig", "BatchSolverResult", "EnginePlan", "ForwardPushConfig",
-    "ItaConfig", "MonteCarloConfig", "PageRankEngine", "PowerConfig",
-    "SOLVERS", "STEP_IMPLS", "Solver", "SolverConfig", "SolverResult",
-    "StepBackend", "TopKResult", "available_step_impls", "dangling_mass",
-    "err_max_rel", "forward_push", "get_step_impl", "ita", "ita_batch",
-    "ita_fixed_point", "ita_incremental", "ita_prioritized",
-    "ita_residual_state", "ita_step", "ita_traced", "make_config",
-    "monte_carlo", "one_hot_personalizations", "power_method",
-    "power_method_batch", "power_method_traced", "power_step",
-    "push_weighted", "reference_pagerank", "register_step_impl",
-    "res_l2", "resolve_step_impl", "solve_pagerank", "solve_pagerank_batch",
-    "spmv_p",
+    "BackendCapabilities", "BatchConfig", "BatchQuery", "BatchSolverResult",
+    "DeltaQuery", "EnginePlan", "ExecutionPlan", "ForwardPushConfig",
+    "ItaConfig", "MonteCarloConfig", "PPRQuery", "PageRankEngine",
+    "PowerConfig", "Query", "RankQuery", "ResultEnvelope", "SOLVERS",
+    "STEP_IMPLS", "Solver", "SolverBackend", "SolverConfig", "SolverResult",
+    "StepBackend", "TopKQuery", "TopKResult", "available_step_impls",
+    "choose_backend", "dangling_mass", "err_max_rel", "forward_push",
+    "get_step_impl", "ita", "ita_batch", "ita_fixed_point",
+    "ita_incremental", "ita_prioritized", "ita_residual_state", "ita_step",
+    "ita_traced", "make_config", "monte_carlo", "one_hot_personalizations",
+    "power_method", "power_method_batch", "power_method_traced",
+    "power_step", "push_weighted", "reference_pagerank",
+    "register_step_impl", "res_l2", "resolve_step_impl", "solve_pagerank",
+    "solve_pagerank_batch", "spmv_p",
 ]

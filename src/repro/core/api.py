@@ -10,10 +10,16 @@ the solvers knowing about engines.
 
 ``solve_pagerank(g, method=..., **kwargs)`` survives as a *deprecation
 shim*: it builds the typed config with ``make_config`` and a throwaway
-engine, so existing callers keep working while new code writes
+engine, then routes through the query plane (``engine.run(RankQuery)``,
+see ``core/query.py`` and docs/API.md), so existing callers keep working
+while new code writes
 
     engine = PageRankEngine(g)
-    engine.solve(ItaConfig(xi=1e-12))
+    engine.run(RankQuery(ItaConfig(xi=1e-12)))   # or engine.solve(...)
+
+Removal timeline: the shim warns since PR 2 and is scheduled for removal
+two PRs after the query plane lands (see docs/API.md §Deprecations) —
+migrate to ``PageRankEngine`` now.
 
 ``solve_pagerank_batch`` (core/batch.py, re-exported here) solves a whole
 [B, n] personalization batch in one device pass; the engine's
@@ -91,22 +97,26 @@ SOLVERS: dict[str, Solver] = {
 def solve_pagerank(g: Graph, method: str = "ita", **kwargs) -> SolverResult:
     """Deprecated one-shot entry point (build an engine per call).
 
-    Prefer ``PageRankEngine(g).solve(cfg)`` — it pays the prepare phase
-    (vertex classification, ELL bucketing, backend ctx) once per graph
-    instead of once per call.
+    Prefer ``PageRankEngine(g).run(RankQuery(cfg))`` (or the ``solve``
+    wrapper) — it pays the prepare phase (vertex classification, ELL
+    bucketing, backend ctx) once per graph instead of once per call.
+    Scheduled for removal two PRs after the query plane (docs/API.md).
     """
     from .engine import EnginePlan, PageRankEngine
+    from .query import RankQuery
 
     if method not in SOLVERS:
         raise KeyError(f"unknown solver {method!r}; available: {sorted(SOLVERS)}")
     warnings.warn(
         "solve_pagerank() re-derives per-graph state on every call; "
-        "use repro.core.engine.PageRankEngine for repeated queries",
+        "use repro.core.engine.PageRankEngine for repeated queries "
+        "(removal scheduled — see docs/API.md)",
         DeprecationWarning, stacklevel=2)
     cfg = make_config(method, **kwargs)
     plan = EnginePlan(step_impl=getattr(cfg, "step_impl", None) or "dense",
                       dtype=getattr(cfg, "dtype", jnp.float64))
-    return PageRankEngine(g, plan=plan).solve(cfg, method=method)
+    engine = PageRankEngine(g, plan=plan)
+    return engine.run(RankQuery(cfg=cfg, method=method)).result
 
 
 def reference_pagerank(g: Graph, *, c: float = 0.85,

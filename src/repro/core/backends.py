@@ -23,14 +23,25 @@ same commutative sum, different grouping):
 
 Registry contract
 -----------------
-A backend is a :class:`StepBackend` with
+A backend is a :class:`SolverBackend` with
 
   ``prepare(g) -> ctx``           one-time per-graph context (a pytree);
   ``push(g, ctx, w) -> y``        y[dst] = Σ_{(src,dst)∈E} w[src], [n]→[n];
   ``push_batch(g, ctx, W) -> Y``  the same over a [B, n] batch;
-  ``jittable``                    whether ``push`` may be traced inside
-                                  ``jit``/``while_loop`` (the frontier
-                                  backend is host-driven and is not).
+  ``capabilities()``              a :class:`BackendCapabilities` record —
+                                  what this layout can do (trace inside
+                                  jit, batch, donate, mesh-shard, update);
+  ``cost(stats, cfg) -> float``   rough per-solve cost estimate, used by
+                                  the engine planner to pick a backend for
+                                  ``step_impl="auto"`` and reported in
+                                  ``ExecutionPlan.explain()``.
+
+The planner (``core/query.py`` + ``PageRankEngine.plan``) consults the
+declared capabilities instead of hard-coding per-name compatibility rules,
+so a newly registered layout becomes plannable by declaration alone.
+``jittable`` survives as a plain attribute (it doubles as the
+``capabilities().jittable`` default) for the host-loop dispatch in
+``run_ita_loop``.
 
 ``ita_step_impl`` / ``signed_ita_step_impl`` build the full ITA round on
 top of ``push``; ``run_ita_loop`` runs either the jitted device-resident
@@ -41,6 +52,7 @@ identical semantics.  New layouts register with
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Callable, Optional
 
@@ -51,17 +63,93 @@ import numpy as np
 from ..graph.structure import Graph
 
 __all__ = [
-    "StepBackend", "STEP_IMPLS", "register_step_impl", "get_step_impl",
-    "available_step_impls", "resolve_step_impl", "ita_step_impl",
+    "BackendCapabilities", "SolverBackend", "StepBackend", "STEP_IMPLS",
+    "register_step_impl", "get_step_impl", "available_step_impls",
+    "resolve_step_impl", "choose_backend", "ita_step_impl",
     "signed_ita_step_impl", "run_ita_loop",
 ]
 
 
 # ---------------------------------------------------------------------------
+# Capabilities
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What one edge layout/schedule can do — the planner's vocabulary.
+
+    Every field is a *declaration* the engine planner (``core/query.py``)
+    reads when mapping a query onto an execution path; adding a layout
+    means declaring its row here, not editing engine branches.
+
+    Attributes
+    ----------
+    jittable : bool
+        ``push`` may be traced inside ``jit`` / ``while_loop`` /
+        ``shard_map`` (host-driven layouts like "frontier" may not).
+    batched : bool
+        has a [B, n] ``push_batch`` worth using (vs. B sequential pushes).
+    donation : bool
+        the compiled batched loop may donate the [B, n] information
+        buffer (requires a device-resident jitted loop).
+    dynamic_update : bool
+        supports the signed incremental cascade of ``core/dynamic.py``
+        (pushes of negative corrections).
+    batch_parallel_mesh : bool
+        can serve under ``shard_map`` with the batch axis on "data"
+        (requires ``jittable``).
+    vertex_sharded_mesh : bool
+        implements the C-way column-sharded (C > 1) push schedule of
+        ``core/distributed.py`` (currently the dense segment-sum only).
+    dtypes : tuple[str, ...]
+        value dtypes the push is validated for.
+    """
+
+    jittable: bool = True
+    batched: bool = True
+    donation: bool = True
+    dynamic_update: bool = True
+    batch_parallel_mesh: bool = True
+    vertex_sharded_mesh: bool = False
+    dtypes: tuple = ("float32", "float64")
+
+    def __post_init__(self):
+        # declarations must be internally consistent, or the planner will
+        # hand out plans the executor cannot drive (e.g. donating a buffer
+        # into a loop that cannot be jitted) — fail at the declaration
+        # site, not with a tracer error mid-query.
+        if not self.jittable:
+            for f in ("donation", "batch_parallel_mesh",
+                      "vertex_sharded_mesh"):
+                if getattr(self, f):
+                    raise ValueError(
+                        f"inconsistent BackendCapabilities: {f}=True "
+                        f"requires jittable=True (a host-driven push "
+                        f"cannot run inside jit/shard_map)")
+
+    def summary(self) -> str:
+        """Compact flag list for ``ExecutionPlan.explain()``."""
+        flags = [f for f in ("jittable", "batched", "donation",
+                             "dynamic_update", "batch_parallel_mesh",
+                             "vertex_sharded_mesh") if getattr(self, f)]
+        return ", ".join(flags) if flags else "none"
+
+
+def _est_rounds(c: float = 0.85, tol: float = 1e-10) -> float:
+    """Geometric-decay round estimate: residual ~ c^t ⇒ t ~ log tol / log c."""
+    c = min(max(float(c), 1e-6), 1.0 - 1e-9)
+    tol = min(max(float(tol), 1e-300), 1.0 - 1e-9)
+    return max(1.0, math.log(tol) / math.log(c))
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
-class StepBackend:
-    """Base class: one edge-propagation layout/schedule."""
+class SolverBackend:
+    """Base class: one edge-propagation layout/schedule.
+
+    Subclasses implement the push pair and *declare* what they can do via
+    :meth:`capabilities` / :meth:`cost`; the engine planner does the rest.
+    """
 
     name: str = "?"
     jittable: bool = True
@@ -77,8 +165,35 @@ class StepBackend:
         """[B, n] → [B, n]; default is a vmap of ``push``."""
         return jax.vmap(lambda w: self.push(g, ctx, w))(W)
 
+    def capabilities(self) -> BackendCapabilities:
+        """Declared capability row; default derives everything requiring a
+        traced loop from ``jittable``.  Override to declare more/less."""
+        return BackendCapabilities(
+            jittable=self.jittable,
+            donation=self.jittable,
+            batch_parallel_mesh=self.jittable,
+        )
 
-STEP_IMPLS: dict[str, StepBackend] = {}
+    def cost(self, stats: Optional[dict] = None, cfg=None) -> float:
+        """Rough per-solve cost estimate in edge-traversal units.
+
+        ``stats`` is a ``dict(n=..., m=...)`` (``None`` ⇒ unit edge count,
+        which still ranks backends relatively); ``cfg`` supplies ``c`` and
+        the stopping threshold when available.  This is a *planning*
+        number — only its ordering across backends matters.  The default
+        charges one unit per edge per round (the dense baseline).
+        """
+        m = float((stats or {}).get("m", 1) or 1)
+        rounds = _est_rounds(getattr(cfg, "c", 0.85),
+                             getattr(cfg, "xi", None)
+                             or getattr(cfg, "tol", None) or 1e-10)
+        return m * rounds
+
+
+# Back-compat alias: PR-1 code and tests subclass/import StepBackend.
+StepBackend = SolverBackend
+
+STEP_IMPLS: dict[str, SolverBackend] = {}
 
 
 def register_step_impl(name: str) -> Callable[[type], type]:
@@ -91,7 +206,7 @@ def register_step_impl(name: str) -> Callable[[type], type]:
     return deco
 
 
-def get_step_impl(name: str) -> StepBackend:
+def get_step_impl(name: str) -> SolverBackend:
     if name not in STEP_IMPLS:
         raise KeyError(
             f"unknown step_impl {name!r}; available: {sorted(STEP_IMPLS)}")
@@ -100,18 +215,47 @@ def get_step_impl(name: str) -> StepBackend:
 
 def available_step_impls(jittable_only: bool = False) -> list[str]:
     return sorted(n for n, b in STEP_IMPLS.items()
-                  if b.jittable or not jittable_only)
+                  if b.capabilities().jittable or not jittable_only)
+
+
+def choose_backend(stats: Optional[dict] = None, cfg=None, *,
+                   jittable_only: bool = True) -> tuple[str, str]:
+    """Cost-based backend selection over the declared capability rows.
+
+    Returns ``(name, reason)`` — the registered backend with the lowest
+    :meth:`SolverBackend.cost` estimate (ties broken toward "dense", then
+    lexicographically, so an equal-cost custom registration never silently
+    hijacks ``step_impl="auto"``).  ``jittable_only`` restricts the pool
+    to backends whose push can live inside the device-resident loop —
+    the "auto" contract, since a host-driven layout must be an explicit
+    opt-in.  This replaces the hard-coded platform switch: on TPU the
+    Mosaic ELL kernel's declared cost undercuts dense, elsewhere the
+    interpret-mode penalty keeps dense cheapest — same answers, but now
+    derived from declarations a new backend can participate in.
+    """
+    cands = []
+    for name, b in STEP_IMPLS.items():
+        if jittable_only and not b.capabilities().jittable:
+            continue
+        cands.append((b.cost(stats, cfg), 0 if name == "dense" else 1, name))
+    if not cands:
+        raise RuntimeError("no eligible backend registered")
+    cost, _, name = min(cands)
+    others = ", ".join(f"{n}={c:.3g}" for c, _, n in sorted(cands))
+    return name, (f"lowest est. cost among jittable backends ({others}; "
+                  f"platform={jax.default_backend()})")
 
 
 def resolve_step_impl(name: Optional[str]) -> str:
-    """Map ``None``/"auto" to the platform default, else validate ``name``.
+    """Map ``None``/"auto" to the cost-chosen default, else validate ``name``.
 
     The bucketed-ELL Pallas kernel compiles to Mosaic on TPU — that is
     where its layout pays; everywhere else it runs interpret-mode
-    (Python-slow), so the sorted-segment-sum dense pass is the default.
+    (Python-slow), so the sorted-segment-sum dense pass wins the cost
+    comparison (see :func:`choose_backend`).
     """
     if name is None or name == "auto":
-        return "ell" if jax.default_backend() == "tpu" else "dense"
+        return choose_backend()[0]
     get_step_impl(name)  # raise KeyError early for unknown names
     return name
 
@@ -122,6 +266,11 @@ def resolve_step_impl(name: Optional[str]) -> str:
 @register_step_impl("dense")
 class DenseBackend(StepBackend):
     """Sorted segment-sum over the full dst-sorted COO edge list."""
+
+    def capabilities(self) -> BackendCapabilities:
+        # the one schedule the C>1 column-sharded distributed pass
+        # implements (core/distributed.py), hence vertex_sharded_mesh.
+        return BackendCapabilities(vertex_sharded_mesh=True)
 
     def push(self, g: Graph, ctx, w: jnp.ndarray) -> jnp.ndarray:
         return jax.ops.segment_sum(w[g.src], g.dst, num_segments=g.n,
@@ -138,6 +287,13 @@ class DenseBackend(StepBackend):
 @register_step_impl("ell")
 class EllBackend(StepBackend):
     """Bucketed-ELL layout, Pallas kernel on the push (repro.kernels)."""
+
+    def cost(self, stats: Optional[dict] = None, cfg=None) -> float:
+        # Mosaic-compiled tiles undercut the gather+segment-sum per edge;
+        # off-TPU the kernel runs interpret-mode (Python-slow) — a large
+        # declared penalty keeps "auto" away from it there.
+        factor = 0.35 if jax.default_backend() == "tpu" else 50.0
+        return super().cost(stats, cfg) * factor
 
     def prepare(self, g: Graph):
         return g.ell()
@@ -182,6 +338,13 @@ class FrontierBackend(StepBackend):
     """
 
     jittable = False
+
+    def cost(self, stats: Optional[dict] = None, cfg=None) -> float:
+        # compressed frontiers visit ~0.4x the edges over a solve, but the
+        # host round-trip per iteration dominates — net ~1.2x dense, so
+        # "frontier" is an explicit choice, never the "auto" pick (and the
+        # jittable gate excludes it from "auto" anyway).
+        return super().cost(stats, cfg) * 0.4 * 3.0
 
     def prepare(self, g: Graph) -> _FrontierPlan:
         return _FrontierPlan(g)
@@ -292,7 +455,7 @@ def run_ita_loop(g: Graph, h0, pi_bar0, *, c: float, xi: float,
     backend = get_step_impl(impl)
     if ctx is None:
         ctx = backend.prepare(g)
-    if backend.jittable:
+    if backend.capabilities().jittable:
         return _ita_loop_jit(g, ctx, h0, pi_bar0, float(c), float(xi),
                              int(max_iter), backend, signed)
     inv_deg = g.inv_out_deg(h0.dtype)

@@ -142,7 +142,7 @@ def ita_batch(
         ctx = backend.prepare(g)
     H0 = (jnp.asarray(p_batch, dtype) * g.n).astype(dtype)
     t0 = time.perf_counter()
-    if backend.jittable:
+    if backend.capabilities().jittable:
         H, PiBar, n_active, it = _ita_batch_loop(
             g, ctx, H0, float(c), float(xi), int(max_iter), backend)
     else:
@@ -212,7 +212,7 @@ def power_method_batch(
     so frontier compression buys nothing.
     """
     backend = get_step_impl(step_impl)
-    if not backend.jittable:
+    if not backend.capabilities().jittable:
         # every vertex stays active under the power iteration — frontier
         # compression buys nothing, so route through the dense batch path
         # (the non-jittable backend's ctx is meaningless there, drop it).

@@ -63,7 +63,7 @@ from ..graph.partition import (
     partition_cols,
 )
 from ..graph.structure import Graph
-from .backends import get_step_impl
+from .backends import get_step_impl, resolve_step_impl
 from .batch import BatchSolverResult, _batch_ita_step
 from .metrics import SolverResult
 
@@ -490,10 +490,11 @@ def ita_batch_distributed(
     t0 = time.perf_counter()
     if C == 1:
         backend = get_step_impl(step_impl)
-        if not backend.jittable:
+        if not backend.capabilities().batch_parallel_mesh:
             raise ValueError(
                 f"step_impl={step_impl!r} is host-driven and cannot run "
-                f"under shard_map; use a jittable backend (e.g. 'dense')")
+                f"under shard_map (declared batch_parallel_mesh=False); "
+                f"use a jittable backend (e.g. 'dense')")
         if ctx is None:
             ctx = backend.prepare(g)
         run = _batch_dp_loop(mesh, backend, float(c), float(xi),
@@ -504,10 +505,13 @@ def ita_batch_distributed(
         H, PiBar, n_active, it = run(g, ctx, H0, inv_deg, nd)
         method = f"ita_batch_dist[{step_impl}|{R}x1]"
     else:
-        if step_impl not in (None, "dense"):
-            raise ValueError(
-                f"vertex-sharded batched ITA (C={C}) implements the dense "
-                f"segment-sum schedule only; got step_impl={step_impl!r}")
+        if step_impl is not None:
+            impl = resolve_step_impl(step_impl)  # "auto" -> platform pick
+            if not get_step_impl(impl).capabilities().vertex_sharded_mesh:
+                raise ValueError(
+                    f"vertex-sharded batched ITA (C={C}) implements the "
+                    f"dense segment-sum schedule only (capability "
+                    f"vertex_sharded_mesh); got step_impl={step_impl!r}")
         part, (src_d, dst_d, ideg, nd) = _batch_2d_operands_cached(
             g, mesh, C, dtype, col_axis)
         run = _batch_2d_loop(mesh, part.nr, float(c), float(xi),

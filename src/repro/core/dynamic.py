@@ -157,7 +157,7 @@ def ita_prioritized(g: Graph, *, c: float = 0.85, xi: float = 1e-10,
     from .backends import available_step_impls
 
     backend = get_step_impl(step_impl)
-    if not backend.jittable:
+    if not backend.capabilities().jittable:
         raise ValueError(
             f"ita_prioritized needs a jittable backend (top_k inside "
             f"while_loop); got step_impl={step_impl!r}; "

@@ -1,4 +1,4 @@
-"""PageRankEngine — a prepared-graph session for repeated PageRank queries.
+"""PageRankEngine — a prepared-graph session behind one query plane.
 
 The paper's central observation (§III) is that dangling and (weakly)
 unreferenced vertices are *structure*: classify them once and every solve
@@ -10,38 +10,46 @@ solves into cheap queries against it, the prepare-once/query-many shape the
 D-Iteration and forward-push serving papers assume:
 
     engine = PageRankEngine(graph, plan=EnginePlan(step_impl="ell"))
-    r  = engine.solve(ItaConfig(xi=1e-12))          # global ranking
-    rb = engine.solve_batch(P)                      # [B, n] PPR queries
-    tk = engine.topk(sources=[3, 17], k=10)         # served PPR answers
-    ru = engine.update(add=[(5, 9)])                # incremental re-rank
+    env = engine.run(RankQuery(ItaConfig(xi=1e-12)))    # the query plane
+    ep  = engine.plan(TopKQuery(sources=[3, 17], k=10)) # decide, don't run
+    print(ep.explain())                                 # backend/mesh/why
 
-Prepare phase (one-time, at construction and after ``update``):
+    r  = engine.solve(ItaConfig(xi=1e-12))          # legacy wrappers —
+    rb = engine.solve_batch(P)                      # thin shims over run(),
+    tk = engine.topk(sources=[3, 17], k=10)         # bit-identical
+    ru = engine.update(add=[(5, 9)])                # (tests/test_query_plan)
+
+Prepare phase (one-time, at construction and after a ``DeltaQuery``):
   * vertex classification per §III — dangling / unreferenced masks and
     counts, materialized on device;
-  * backend selection (``EnginePlan.step_impl="auto"`` resolves per
-    platform) and its per-graph context: ``Graph.ell()`` bucketing for the
-    Pallas kernel, the CSR-by-src plan for frontier compression;
+  * backend selection: ``EnginePlan.step_impl="auto"`` resolves by the
+    declared :meth:`~repro.core.backends.SolverBackend.cost` estimates
+    (``choose_backend``), an explicit name is validated; the per-graph
+    context follows (``Graph.ell()`` bucketing for the Pallas kernel, the
+    CSR-by-src plan for frontier compression);
   * mesh resolution (``EnginePlan.mesh``): the graph operands and backend
-    ctx are replicated onto the device grid once with ``NamedSharding``,
-    after which ``solve_batch``/``topk`` shard every [B, n] query's batch
-    axis over "data" (and, on an (R, C) grid, the vertex axis over
-    "model") via ``core/distributed.ita_batch_distributed`` — see
-    docs/SHARDING.md.  Batch-parallel serving stays bit-identical to the
-    unsharded engine (tests/test_batch_distributed.py).
+    ctx are replicated onto the device grid once with ``NamedSharding``;
+    mesh eligibility comes from the backend's declared capabilities
+    (``batch_parallel_mesh`` / ``vertex_sharded_mesh``), not its name.
 
-Queries reuse the prepared context verbatim — the engine calls the very
-same solver functions as the legacy API with ``ctx=`` threaded through, so
-results are bit-for-bit identical to ``solve_pagerank`` (asserted by
-tests/test_engine.py) while skipping all per-call preparation.  Compiled
-traces are keyed on (backend instance, config statics), so repeated queries
-hit jax's jit cache; on accelerators the batched-ITA buffer is additionally
-donated via a per-engine compiled cache (``_compiled``), keyed on the
-config's :meth:`~repro.core.solver_config.SolverConfig.static_key`.
+**The query plane** (``core/query.py``): :meth:`PageRankEngine.plan` maps
+a typed query (``RankQuery`` / ``PPRQuery`` / ``TopKQuery`` /
+``DeltaQuery`` / ``BatchQuery``) onto an ``ExecutionPlan`` — backend, mesh
+layout, execution path, estimated cost, and an ``explain()`` why-chain —
+and :meth:`PageRankEngine.run` executes that plan, returning a
+``ResultEnvelope`` (values + counters + plan provenance + timing).  The
+planner, not this class, owns the backend × mesh × batch compatibility
+matrix; the engine only drives the path the plan names.  Queries reuse the
+prepared context verbatim — ``run`` calls the very same solver functions
+as the legacy API with ``ctx=`` threaded through, so results are
+bit-for-bit identical to the per-call path (asserted by
+tests/test_engine.py and tests/test_query_plan.py).
 
-``update`` wraps ``core/dynamic.py``: the engine holds the unnormalized
-residual pair (π̄, h) across updates, so successive edge deltas each cost
-one *incremental* signed-ITA cascade instead of a from-scratch solve, and
-the state chains — update after update — without ever resolving globally.
+``DeltaQuery`` wraps ``core/dynamic.py``: the engine holds the
+unnormalized residual pair (π̄, h) across updates, so successive edge
+deltas each cost one *incremental* signed-ITA cascade instead of a
+from-scratch solve, and the state chains — update after update — without
+ever resolving globally.
 """
 from __future__ import annotations
 
@@ -54,7 +62,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
 from ..graph.structure import Graph, apply_edge_delta
-from .backends import get_step_impl, resolve_step_impl
+from .backends import choose_backend, get_step_impl, resolve_step_impl
 from .batch import (
     BatchSolverResult,
     _ita_batch_loop,
@@ -65,6 +73,18 @@ from .batch import (
 from .distributed import ita_batch_distributed, resolve_mesh
 from .dynamic import ita_incremental, ita_residual_state
 from .metrics import SolverResult
+from .query import (
+    BatchQuery,
+    DeltaQuery,
+    ExecutionPlan,
+    PlannerState,
+    PPRQuery,
+    Query,
+    RankQuery,
+    ResultEnvelope,
+    TopKQuery,
+    plan_query,
+)
 from .solver_config import BatchConfig, SolverConfig, make_config
 
 __all__ = ["EnginePlan", "PageRankEngine", "TopKResult"]
@@ -76,18 +96,21 @@ class EnginePlan:
 
     The plan is the engine-level analogue of a solver config: everything
     here is resolved once at prepare time and becomes part of the compiled
-    state's identity.  ``step_impl="auto"`` picks the platform default
-    (bucketed-ELL on TPU where the Mosaic kernel pays, dense elsewhere).
+    state's identity.  ``step_impl="auto"`` picks the lowest-cost jittable
+    backend by the registry's declared estimates (bucketed-ELL on TPU
+    where the Mosaic kernel pays, dense elsewhere).
 
     ``mesh`` asks the engine to serve batched queries sharded over a
     device grid: ``None`` (single device), ``"host"`` (all ``jax.devices()``
     as an (n_dev, 1) batch-parallel grid — the CI fallback that works on
     simulated host devices), ``(R,)`` / ``(R, C)`` shapes, or a prebuilt
     ``jax.sharding.Mesh`` with a "data" (and optionally "model") axis.
-    Constraints, enforced at prepare time: the backend must be jittable
-    (the host-driven "frontier" cannot run under shard_map), and C-way
-    vertex sharding (C > 1) requires ``step_impl="dense"`` — the only
-    schedule the vertex-sharded pass implements.
+    Constraints, enforced at prepare time from the backend's declared
+    capabilities: serving under ``shard_map`` needs
+    ``batch_parallel_mesh`` (the host-driven "frontier" declares it
+    false), and C-way vertex sharding (C > 1) needs
+    ``vertex_sharded_mesh`` — currently declared by "dense" only, the one
+    schedule the column-sharded pass implements.
     """
 
     step_impl: Optional[str] = "auto"
@@ -109,14 +132,14 @@ class TopKResult(NamedTuple):
 
 
 class PageRankEngine:
-    """Prepare a graph once; answer solve/batch/top-k/update queries."""
+    """Prepare a graph once; plan and run typed queries against it."""
 
     def __init__(self, graph: Graph, plan: Optional[EnginePlan] = None):
-        self.plan = plan or EnginePlan()
+        self.engine_plan = plan or EnginePlan()
         # monotone counter, observable by tests: one tick per prepare phase
         # (construction + each update), never per query.
         self.prepare_count = 0
-        self._state = None        # (pi_bar, h) residual pair for update()
+        self._state = None        # (pi_bar, h) residual pair for DeltaQuery
         self._compiled = {}       # static_key -> donated jitted solve
         self._donate = jax.default_backend() != "cpu"
         self._prepare(graph)
@@ -129,8 +152,15 @@ class PageRankEngine:
         and (when the plan carries a mesh) lay the prepared state out on
         the device grid once so every query reuses the placement."""
         self.graph = g
-        self.step_impl = resolve_step_impl(self.plan.step_impl)
+        plan = self.engine_plan
+        if plan.step_impl in (None, "auto"):
+            self.step_impl, self._backend_reason = choose_backend(
+                dict(n=g.n, m=g.m))
+        else:
+            self.step_impl = resolve_step_impl(plan.step_impl)
+            self._backend_reason = "explicit EnginePlan(step_impl=...) request"
         self.backend = get_step_impl(self.step_impl)
+        self.caps = self.backend.capabilities()
         # §III vertex classification, materialized once on device.
         self.dangling_mask = g.dangling_mask
         self.unreferenced_mask = g.unreferenced_mask
@@ -141,28 +171,29 @@ class PageRankEngine:
             # honor the plan's bucketing; Graph.ell caches per (widths,
             # align) so the EllBackend default prepare() would otherwise
             # convert under its own key.
-            self._ctx = g.ell(widths=self.plan.ell_widths,
-                              row_align=self.plan.row_align)
+            self._ctx = g.ell(widths=plan.ell_widths,
+                              row_align=plan.row_align)
         else:
             self._ctx = self.backend.prepare(g)
-        self.mesh = resolve_mesh(self.plan.mesh)
+        self.mesh = resolve_mesh(plan.mesh)
         self._mesh_shape = None
         if self.mesh is not None:
-            if not self.backend.jittable:
+            if not self.caps.batch_parallel_mesh:
                 raise ValueError(
                     f"EnginePlan(mesh=...) needs a jittable backend; "
                     f"{self.step_impl!r} is host-driven and cannot run "
-                    f"under shard_map")
+                    f"under shard_map (declared batch_parallel_mesh=False)")
             C = (self.mesh.shape["model"]
                  if "model" in self.mesh.axis_names else 1)
             # normalized (R, C) grid — a user-supplied single-axis Mesh
             # has a 1-length devices.shape, so derive from the axes.
             self._mesh_shape = (self.mesh.shape["data"], C)
-            if C > 1 and self.step_impl != "dense":
+            if C > 1 and not self.caps.vertex_sharded_mesh:
                 raise ValueError(
                     f"vertex sharding (mesh model axis = {C}) implements "
-                    f"the dense schedule only; prepare the engine with "
-                    f"step_impl='dense', not {self.step_impl!r}")
+                    f"the dense schedule only; {self.step_impl!r} does not "
+                    f"declare vertex_sharded_mesh — prepare the engine "
+                    f"with step_impl='dense'")
             # replicate the prepared context and graph operands onto the
             # grid once; shard_map then never reshards them per query.
             rep = NamedSharding(self.mesh, PartitionSpec())
@@ -171,108 +202,156 @@ class PageRankEngine:
         self._compiled.clear()  # traces close over the old graph's buffers
         self.prepare_count += 1
 
-    def describe(self) -> dict:
-        """Prepared-state summary (serving logs, benchmarks)."""
-        return dict(
+    def describe(self, include_plan: bool = True) -> dict:
+        """Prepared-state summary (serving logs, benchmarks).
+
+        ``plan`` carries the default-query ``ExecutionPlan.explain()``
+        text — the backend/mesh/why record a serving log wants.  Pass
+        ``include_plan=False`` to skip building it (callers that print
+        a query-specific plan themselves, or only read a field).
+        """
+        d = dict(
             n=self.graph.n, m=self.graph.m,
             n_dangling=self.n_dangling,
             n_unreferenced=self.n_unreferenced,
             step_impl=self.step_impl,
-            jittable=self.backend.jittable,
+            jittable=self.caps.jittable,
+            capabilities=self.caps.summary(),
             mesh=self._mesh_shape,
             prepare_count=self.prepare_count,
             has_residual_state=self._state is not None,
         )
-
-    def _require_compatible(self, cfg: SolverConfig) -> None:
-        want = getattr(cfg, "step_impl", None)
-        if want not in (None, "auto", self.step_impl):
-            raise ValueError(
-                f"config requests step_impl={want!r} but this engine "
-                f"prepared {self.step_impl!r}; construct the engine with "
-                f"EnginePlan(step_impl={want!r}) instead")
-        want_mesh = getattr(cfg, "mesh_shape", None)
-        if want_mesh is not None:
-            shape = want_mesh if len(want_mesh) == 2 else (want_mesh[0], 1)
-            have = self._mesh_shape
-            if shape != have:
-                raise ValueError(
-                    f"config requests mesh_shape={shape} but this engine "
-                    f"prepared mesh={have}; construct the engine with "
-                    f"EnginePlan(mesh={shape}) instead")
+        if include_plan:
+            d["plan"] = self.plan(RankQuery()).explain()
+        return d
 
     # ------------------------------------------------------------------ #
-    # queries
+    # the query plane: plan / run
     # ------------------------------------------------------------------ #
-    def solve(self, cfg: Optional[SolverConfig] = None, *,
-              method: Optional[str] = None) -> SolverResult:
-        """One PR(P, c, p) solve against the prepared graph.
+    def _planner_state(self) -> PlannerState:
+        return PlannerState(
+            step_impl=self.step_impl,
+            capabilities=self.caps,
+            backend_reason=self._backend_reason,
+            mesh_shape=self._mesh_shape,
+            donate=self._donate,
+            n=self.graph.n,
+            m=self.graph.m,
+            default_method=self.engine_plan.default_method,
+            dtype=self.engine_plan.dtype,
+            has_residual_state=self._state is not None,
+        )
 
-        ``cfg`` defaults to the plan's ``default_method`` config; ``method``
-        overrides the registry entry for configs shared between variants
-        (e.g. ``ItaConfig`` with ``method="ita_traced"``).
+    def plan(self, query: Query) -> ExecutionPlan:
+        """Decide how ``query`` would execute — without executing it.
+
+        Pure planning: backend, mesh layout, path, estimated cost, and the
+        why-chain ``ExecutionPlan.explain()`` renders.  All compatibility
+        errors (``TypeError``/``ValueError``/``KeyError``) are raised
+        here, before any device work.
         """
+        return plan_query(self._planner_state(), query)
+
+    def run(self, query: Query) -> ResultEnvelope:
+        """Execute ``query`` along its plan; the one entry point.
+
+        Returns a :class:`~repro.core.query.ResultEnvelope` whose
+        ``result`` is the legacy typed result (``SolverResult`` /
+        ``BatchSolverResult`` / ``TopKResult`` / tuple of envelopes),
+        bit-identical to the legacy method for the same arguments.
+        """
+        if isinstance(query, BatchQuery):
+            # sub-queries plan themselves as they run (a DeltaQuery in the
+            # sequence re-prepares the engine, so pre-computed sub-plans
+            # could go stale); the composite envelope's plan records the
+            # plans that actually executed.
+            t0 = time.perf_counter()
+            envs = tuple(self.run(q) for q in query.queries)
+            ep = ExecutionPlan(
+                query=query.kind, backend=self.step_impl, path="composite",
+                method="-", mesh=self._mesh_shape, micro_batch=len(envs),
+                reasons=("sequential composition; each sub-plan below is "
+                         "the one its sub-query executed",),
+                sub_plans=tuple(e.plan for e in envs))
+            return ResultEnvelope(
+                result=envs, plan=ep,
+                values=tuple(e.values for e in envs),
+                wall_time_s=time.perf_counter() - t0)
+        ep = self.plan(query)
+        t0 = time.perf_counter()
+        if isinstance(query, RankQuery):
+            res = self._exec_rank(ep)
+            values = res.pi
+        elif isinstance(query, PPRQuery):
+            res = self._exec_ppr(query.p_batch, ep)
+            values = res.pi
+        elif isinstance(query, TopKQuery):
+            res = self._exec_topk(query, ep)
+            values = (res.indices, res.scores)
+        elif isinstance(query, DeltaQuery):
+            res = self._exec_delta(query)
+            values = res.pi
+        else:  # plan_query would have raised already; defensive
+            raise TypeError(f"not a runnable Query: {type(query).__name__}")
+        counters = res.result if isinstance(res, TopKResult) else res
+        return ResultEnvelope(
+            result=res, plan=ep, values=values,
+            iterations=int(counters.iterations),
+            residual=float(counters.residual),
+            converged=bool(counters.converged),
+            wall_time_s=time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------ #
+    # plan execution (each drives exactly the legacy code path)
+    # ------------------------------------------------------------------ #
+    def _exec_rank(self, ep: ExecutionPlan) -> SolverResult:
         from .api import SOLVERS  # local import: api builds engines (shim)
 
-        if cfg is None:
-            cfg = make_config(self.plan.default_method, dtype=self.plan.dtype)
-        if isinstance(cfg, BatchConfig):
-            raise TypeError("BatchConfig describes a [B, n] solve; "
-                            "use solve_batch / topk")
-        method = method or type(cfg).method
-        if method not in SOLVERS:
-            raise KeyError(f"unknown solver {method!r}; "
-                           f"available: {sorted(SOLVERS)}")
-        self._require_compatible(cfg)
-        return SOLVERS[method](self.graph, cfg, step_impl=self.step_impl,
-                               ctx=self._ctx)
+        # step_impl/ctx are signature-filtered by Solver.__call__, so the
+        # "direct" path (forward_push, monte_carlo) ignores them — one
+        # call shape, same bits as the legacy method.
+        return SOLVERS[ep.method](self.graph, ep.cfg,
+                                  step_impl=self.step_impl, ctx=self._ctx)
 
-    def solve_batch(self, p_batch: jnp.ndarray,
-                    cfg: Optional[BatchConfig] = None) -> BatchSolverResult:
-        """Solve a whole [B, n] personalization batch in one device pass.
-
-        ``p_batch`` is float[B, n] (any float dtype; promoted to
-        ``cfg.dtype``, default float64), one preference row per query;
-        returns a :class:`~repro.core.batch.BatchSolverResult` whose
-        ``pi`` is [B, n] with each row summing to 1.
-
-        When the engine holds a mesh (``EnginePlan.mesh``) and
-        ``cfg.shard_batch`` is true, ITA batches run sharded through
-        ``ita_batch_distributed`` — batch axis over "data", vertex axis
-        over "model" on an (R, C) grid — and batch-parallel results are
-        bit-identical to the unsharded path.  Power batches and
-        ``shard_batch=False`` queries fall back to the single-device pass
-        against the same prepared ctx.
-        """
-        cfg = cfg or BatchConfig(dtype=self.plan.dtype)
-        if not isinstance(cfg, BatchConfig):
-            raise TypeError(f"solve_batch takes a BatchConfig, "
-                            f"got {type(cfg).__name__}")
-        self._require_compatible(cfg)
+    def _exec_ppr(self, p_batch, ep: ExecutionPlan) -> BatchSolverResult:
+        cfg = ep.cfg
         p_batch = jnp.asarray(p_batch)
-        if p_batch.ndim != 2 or p_batch.shape[1] != self.graph.n:
-            raise ValueError(f"p_batch must be [B, n={self.graph.n}], "
-                             f"got {p_batch.shape}")
-        if (self.mesh is not None and cfg.shard_batch
-                and cfg.batch_method == "ita"):
+        if ep.path == "distributed-batch":
             return ita_batch_distributed(
                 self.graph, p_batch, self.mesh, c=cfg.c, xi=cfg.xi,
                 max_iter=cfg.max_iter, dtype=cfg.dtype,
                 step_impl=self.step_impl, ctx=self._ctx)
-        if (self._donate and cfg.batch_method == "ita"
-                and self.backend.jittable):
+        if ep.path == "donated-batch":
             return self._solve_batch_donated(p_batch, cfg)
-        if cfg.batch_method == "ita":
-            fn = ita_batch
-        elif cfg.batch_method == "power":
-            fn = power_method_batch
-        else:
-            raise KeyError(f"unknown batch_method {cfg.batch_method!r}; "
-                           f"available: ['ita', 'power']")
+        fn = ita_batch if cfg.batch_method == "ita" else power_method_batch
         kw = cfg.kwargs_for(fn)
         kw["step_impl"] = self.step_impl
         kw["ctx"] = self._ctx
         return fn(self.graph, p_batch, **kw)
+
+    def _exec_topk(self, q: TopKQuery, ep: ExecutionPlan) -> TopKResult:
+        P = one_hot_personalizations(self.graph, q.sources,
+                                     dtype=self.engine_plan.dtype)
+        rb = self._exec_ppr(P, ep)
+        scores, indices = jax.lax.top_k(rb.pi, int(q.k))
+        return TopKResult(indices=indices, scores=scores, result=rb)
+
+    def _exec_delta(self, q: DeltaQuery) -> SolverResult:
+        plan = self.engine_plan
+        if self._state is None:
+            pi_bar, h, _, _ = ita_residual_state(
+                self.graph, c=plan.c, xi=plan.update_xi,
+                dtype=plan.dtype, step_impl=self.step_impl,
+                ctx=self._ctx)
+            self._state = (pi_bar, h)
+        g_old = self.graph
+        g_new = apply_edge_delta(g_old, add=q.add, remove=q.remove)
+        self._prepare(g_new)  # ctx must belong to the NEW graph
+        pi_bar, h = self._state
+        result, self._state = ita_incremental(
+            g_old, g_new, pi_bar, h, c=plan.c, xi=plan.update_xi,
+            step_impl=self.step_impl, ctx=self._ctx, return_state=True)
+        return result
 
     def _solve_batch_donated(self, p_batch, cfg: BatchConfig):
         """Accelerator path: per-engine compiled batched-ITA loop with the
@@ -304,27 +383,48 @@ class PageRankEngine:
             batch=int(p_batch.shape[0]),
             wall_time_s=time.perf_counter() - t0)
 
+    # ------------------------------------------------------------------ #
+    # legacy query methods — thin wrappers over run(), bit-identical
+    # ------------------------------------------------------------------ #
+    def solve(self, cfg: Optional[SolverConfig] = None, *,
+              method: Optional[str] = None) -> SolverResult:
+        """One PR(P, c, p) solve; wrapper over ``run(RankQuery(...))``.
+
+        ``cfg`` defaults to the plan's ``default_method`` config; ``method``
+        overrides the registry entry for configs shared between variants
+        (e.g. ``ItaConfig`` with ``method="ita_traced"``).
+        """
+        return self.run(RankQuery(cfg=cfg, method=method)).result
+
+    def solve_batch(self, p_batch: jnp.ndarray,
+                    cfg: Optional[BatchConfig] = None) -> BatchSolverResult:
+        """Solve a whole [B, n] personalization batch in one device pass;
+        wrapper over ``run(PPRQuery(...))``.
+
+        ``p_batch`` is float[B, n] (any float dtype; promoted to
+        ``cfg.dtype``, default float64), one preference row per query;
+        returns a :class:`~repro.core.batch.BatchSolverResult` whose
+        ``pi`` is [B, n] with each row summing to 1.  The planner decides
+        the path — mesh-sharded / donated / plain batched loop — from the
+        engine mesh and the backend's declared capabilities; see
+        ``engine.plan(PPRQuery(...)).explain()``.
+        """
+        return self.run(PPRQuery(p_batch=p_batch, cfg=cfg)).result
+
     def topk(self, sources, k: int = 10,
              cfg: Optional[BatchConfig] = None) -> TopKResult:
-        """Serve PPR queries: per-source top-``k`` vertices and scores.
+        """Serve PPR queries; wrapper over ``run(TopKQuery(...))``.
 
         ``sources`` is an int[B] vector of seed vertices (classic one-hot
         PPR); returns a :class:`TopKResult` with ``indices`` int32 [B, k]
         and ``scores`` ``plan.dtype`` [B, k], rows sorted by descending
-        score.  Runs through :meth:`solve_batch`, so an engine mesh
-        shards the underlying [B, n] pass transparently.
+        score.
         """
-        P = one_hot_personalizations(self.graph, sources,
-                                     dtype=self.plan.dtype)
-        rb = self.solve_batch(P, cfg)
-        scores, indices = jax.lax.top_k(rb.pi, int(k))
-        return TopKResult(indices=indices, scores=scores, result=rb)
+        return self.run(TopKQuery(sources=sources, k=int(k), cfg=cfg)).result
 
-    # ------------------------------------------------------------------ #
-    # dynamic updates
-    # ------------------------------------------------------------------ #
     def update(self, add=(), remove=()) -> SolverResult:
-        """Apply an edge delta and incrementally re-rank.
+        """Apply an edge delta and incrementally re-rank; wrapper over
+        ``run(DeltaQuery(...))``.
 
         Maintains the unnormalized residual pair (π̄, h) across calls: the
         first update pays one from-scratch residual solve, every later one
@@ -332,17 +432,4 @@ class PageRankEngine:
         the changed support.  The engine re-prepares for the new structure
         (masks, bucketing, backend ctx) before solving.
         """
-        if self._state is None:
-            pi_bar, h, _, _ = ita_residual_state(
-                self.graph, c=self.plan.c, xi=self.plan.update_xi,
-                dtype=self.plan.dtype, step_impl=self.step_impl,
-                ctx=self._ctx)
-            self._state = (pi_bar, h)
-        g_old = self.graph
-        g_new = apply_edge_delta(g_old, add=add, remove=remove)
-        self._prepare(g_new)  # ctx must belong to the NEW graph
-        pi_bar, h = self._state
-        result, self._state = ita_incremental(
-            g_old, g_new, pi_bar, h, c=self.plan.c, xi=self.plan.update_xi,
-            step_impl=self.step_impl, ctx=self._ctx, return_state=True)
-        return result
+        return self.run(DeltaQuery(add=add, remove=remove)).result

@@ -139,7 +139,7 @@ def ita_traced(
         return ita_step_impl(backend, g, ctx, h, pb, c, xi, inv_deg,
                              non_dangling)
 
-    step = jax.jit(_step) if backend.jittable else _step
+    step = jax.jit(_step) if backend.capabilities().jittable else _step
 
     res_hist, active_hist, ops_hist, err_hist = [], [], [], []
     est_prev = None

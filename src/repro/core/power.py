@@ -88,7 +88,7 @@ def power_method(
     ctx=None,
 ) -> SolverResult:
     backend = get_step_impl(step_impl)
-    if not backend.jittable:
+    if not backend.capabilities().jittable:
         # every vertex stays active under the power iteration — active-set
         # compression buys nothing, so route through the dense fast path
         # (same substitution power_method_batch makes).  The prepared ctx

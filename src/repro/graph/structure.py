@@ -193,7 +193,14 @@ def apply_edge_delta(g: Graph, add=(), remove=()) -> Graph:
             raise ValueError(f"cannot add existing edges: "
                              f"{add[present][:4].tolist()}")
         key = np.concatenate([key, akey])
-    return graph_from_edges((key % g.n), (key // g.n), g.n)
+    g_new = graph_from_edges((key % g.n), (key // g.n), g.n)
+    # Defensive pin, not a fix: graph_from_edges already returns a fresh
+    # Graph with no cache, so nothing can inherit the OLD edge set's ELL
+    # buckets today.  Pinning an empty cache here makes that invariant
+    # explicit and survivable if Graph construction ever starts copying
+    # cached layouts (tests/test_query_plan.py::TestDeltaEllCache).
+    object.__setattr__(g_new, "_ell_cache", {})
+    return g_new
 
 
 def validate_graph(g: Graph) -> None:

@@ -1,4 +1,4 @@
-"""The paper's workload as a launchable job, driven through the engine API.
+"""The paper's workload as a launchable job, driven through the query plane.
 
     PYTHONPATH=src python -m repro.launch.pagerank --dataset web-Google \
         --scale 0.05 --method ita --xi 1e-10 --step-impl ell
@@ -7,8 +7,10 @@ Single-device by default; ``--partition 1d|2d`` runs the distributed
 solvers over whatever devices exist (the dry-run exercises the same code
 on the 512-device production mesh).  ``--batch B`` switches to the serving
 shape: B one-hot personalized-PageRank queries solved in one device pass
-through ``PageRankEngine.solve_batch`` (the request-loop driver around the
-same path is ``repro.launch.ppr_serve``).
+(a ``PPRQuery`` through ``PageRankEngine.run``; the request-loop driver
+around the same path is ``repro.launch.ppr_serve``).  ``--explain`` prints
+the planner's decision for the requested query — backend, mesh layout,
+execution path and why — and exits without solving (docs/API.md).
 """
 from __future__ import annotations
 
@@ -33,6 +35,9 @@ def main(argv=None) -> int:
     ap.add_argument("--xi", type=float, default=1e-10)
     ap.add_argument("--c", type=float, default=0.85)
     ap.add_argument("--partition", choices=["none", "1d", "2d"], default="none")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the ExecutionPlan for the requested query "
+                         "(backend, mesh, path, why) and exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -41,10 +46,16 @@ def main(argv=None) -> int:
         BatchConfig,
         EnginePlan,
         PageRankEngine,
+        PPRQuery,
+        RankQuery,
         make_config,
         one_hot_personalizations,
     )
     from ..graph import paper_dataset
+
+    if args.explain and args.partition != "none":
+        ap.error("--explain describes engine queries; the --partition "
+                 "solvers run outside the engine planner")
 
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
     print(f"graph: {g.stats()}")
@@ -67,8 +78,10 @@ def main(argv=None) -> int:
 
     engine = PageRankEngine(g, EnginePlan(step_impl=args.step_impl,
                                           c=args.c))
-    print(f"engine: {engine.describe()}")
+    # the multi-line plan prints separately (--explain)
+    print(f"engine: {engine.describe(include_plan=False)}")
 
+    # build the typed query the run (or --explain) is about
     if args.batch > 0:
         import numpy as np
         rng = np.random.default_rng(args.seed)
@@ -76,8 +89,23 @@ def main(argv=None) -> int:
         if args.method not in ("ita", "power"):
             ap.error(f"--batch supports methods ita|power, got {args.method!r}")
         P = one_hot_personalizations(g, seeds)
-        rb = engine.solve_batch(P, BatchConfig(
+        query = PPRQuery(p_batch=P, cfg=BatchConfig(
             batch_method=args.method, c=args.c, xi=args.xi, tol=args.xi))
+    else:
+        kwargs = {"c": args.c}
+        if args.method in ("ita", "forward_push"):
+            kwargs["xi"] = args.xi
+        elif args.method == "power":
+            kwargs["tol"] = args.xi
+        query = RankQuery(cfg=make_config(args.method, **kwargs))
+
+    if args.explain:
+        print(engine.plan(query).explain())
+        return 0
+
+    env = engine.run(query)
+    if args.batch > 0:
+        rb = env.result
         print(f"batched PPR: {rb.stats()}")
         for b in range(min(args.batch, 4)):
             top = jax.numpy.argsort(-rb.pi[b])[:3]
@@ -85,14 +113,10 @@ def main(argv=None) -> int:
                   f"{[(int(i), float(rb.pi[b, i])) for i in top]}")
         return 0
 
-    kwargs = {"c": args.c}
-    if args.method in ("ita", "forward_push"):
-        kwargs["xi"] = args.xi
-    elif args.method == "power":
-        kwargs["tol"] = args.xi
-    r = engine.solve(make_config(args.method, **kwargs))
+    r = env.result
     print(f"method={r.method} iterations={r.iterations} ops={r.ops:.3e} "
-          f"wall={r.wall_time_s}s converged={r.converged}")
+          f"wall={r.wall_time_s}s converged={r.converged} "
+          f"(plan: {env.plan.path})")
     top = jax.numpy.argsort(-r.pi)[:5]
     print("top-5 vertices:", [(int(i), float(r.pi[i])) for i in top])
     return 0

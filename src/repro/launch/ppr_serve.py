@@ -10,7 +10,10 @@ The millions-of-users shape from the ROADMAP, reduced to one host: a
 stream of personalized-PageRank requests (seed vertices, skewed toward
 popular pages by a Zipf law over in-degree rank) is drained in fixed-size
 micro-batches of one-hot personalizations, each answered by a single
-``PageRankEngine.topk`` call — one [B, n] device pass per micro-batch.
+``engine.run(TopKQuery(...))`` — one [B, n] device pass per micro-batch.
+Before serving, the driver prints the planner's decision for the
+micro-batch shape (``engine.plan(query).explain()`` — backend, mesh
+layout, path, why; see docs/API.md).
 
 Loop structure mirrors ``launch/serve.py``'s prefill/decode split:
   1. **prepare** — build the engine once (vertex classification, ELL
@@ -93,7 +96,7 @@ def main(argv=None) -> int:
     jax.config.update("jax_enable_x64", True)
     import numpy as np
 
-    from ..core import BatchConfig, EnginePlan, PageRankEngine
+    from ..core import BatchConfig, EnginePlan, PageRankEngine, TopKQuery
     from ..graph import paper_dataset
 
     mesh = None
@@ -111,10 +114,11 @@ def main(argv=None) -> int:
     engine = PageRankEngine(g, EnginePlan(step_impl=args.step_impl,
                                           c=args.c, mesh=mesh))
     t_prepare = time.perf_counter() - t0
-    print(f"engine: {engine.describe()}  prepare: {t_prepare*1e3:.1f} ms")
+    desc = engine.describe(include_plan=False)  # serving plan prints below
+    print(f"engine: {desc}  prepare: {t_prepare*1e3:.1f} ms")
     # only ITA batches run through the sharded pass; report what actually
     # happens rather than what was requested
-    mesh_eff = engine.describe()["mesh"] if args.method == "ita" else None
+    mesh_eff = desc["mesh"] if args.method == "ita" else None
     if mesh is not None and mesh_eff is None:
         print("warning: --mesh applies to method=ita only; "
               "power batches run single-device")
@@ -125,9 +129,13 @@ def main(argv=None) -> int:
     seeds = zipf_seeds(g, args.queries, args.zipf, rng)
     B = max(1, min(args.batch, args.queries))
 
+    # report the planner's decision for the micro-batch shape we will serve
+    print(engine.plan(TopKQuery(sources=seeds[:B], k=args.topk,
+                                cfg=cfg)).explain())
+
     # 2. warmup — compile the [B, n] pass outside the measured window
     t0 = time.perf_counter()
-    engine.topk(seeds[:B], k=args.topk, cfg=cfg)
+    engine.run(TopKQuery(sources=seeds[:B], k=args.topk, cfg=cfg))
     t_compile = time.perf_counter() - t0
 
     # 3. serve — drain the stream in fixed-shape micro-batches
@@ -140,7 +148,7 @@ def main(argv=None) -> int:
         if n_real < B:  # pad the tail to the compiled shape
             req = np.concatenate([req, np.full(B - n_real, req[-1])])
         t1 = time.perf_counter()
-        tk = engine.topk(req, k=args.topk, cfg=cfg)
+        tk = engine.run(TopKQuery(sources=req, k=args.topk, cfg=cfg)).result
         jax.block_until_ready(tk.scores)
         lat.append(time.perf_counter() - t1)
         answered += n_real

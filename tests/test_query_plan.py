@@ -1,0 +1,387 @@
+"""Query plane: planner decisions + ``run(query)`` ≡ legacy parity.
+
+Two contracts:
+
+  * the **planner** (``engine.plan(query) -> ExecutionPlan``) picks the
+    backend/mesh/path combination the capability matrix dictates — the
+    table below pins every (backend × query kind × mesh) cell, and
+    ``explain()`` must name the backend, the mesh layout, and why;
+  * the **executor** (``engine.run(query)``) is a pure re-plumbing: its
+    results are bit-identical to the legacy methods and to the module-
+    level solvers for every registered backend, including the 8-device
+    simulated host mesh (subprocess, the test_distributed.py pattern).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchConfig,
+    BatchQuery,
+    DeltaQuery,
+    EnginePlan,
+    ItaConfig,
+    PageRankEngine,
+    PowerConfig,
+    PPRQuery,
+    RankQuery,
+    TopKQuery,
+    available_step_impls,
+    choose_backend,
+    get_step_impl,
+    ita,
+    power_method,
+    solve_pagerank_batch,
+)
+from repro.core.query import ExecutionPlan, ResultEnvelope
+from repro.graph import apply_edge_delta, graph_from_edges, web_graph
+
+ALL_IMPLS = available_step_impls()
+
+ENV = {**os.environ,
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+       "PYTHONPATH": "src",
+       "JAX_PLATFORMS": "cpu"}
+
+
+def run_py(body: str) -> dict:
+    """Run a python snippet in a fresh 8-device process, parse last json line."""
+    script = textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], env=ENV,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+@pytest.fixture(scope="module")
+def g():
+    return web_graph(400, 3200, dangling_frac=0.25, seed=17)
+
+
+@pytest.fixture(scope="module")
+def P(g):
+    from repro.core import one_hot_personalizations
+
+    return one_hot_personalizations(g, [1, 5, 9])
+
+
+# --------------------------------------------------------------------------
+# planner decisions — the capability matrix, table-driven
+# --------------------------------------------------------------------------
+# (step_impl, query kind, EnginePlan.mesh, expected path, expected plan.mesh)
+PLAN_TABLE = [
+    ("dense",    "rank",  None,   "while-loop",         None),
+    ("frontier", "rank",  None,   "host-loop",          None),
+    ("ell",      "rank",  None,   "while-loop",         None),
+    ("dense",    "batch", None,   "batched-while-loop", None),
+    ("frontier", "batch", None,   "batched-host-loop",  None),
+    ("ell",      "batch", None,   "batched-while-loop", None),
+    ("dense",    "topk",  None,   "batched-while-loop", None),
+    # a mesh-prepared engine serves ITA batches sharded ((1, 1) runs on
+    # the real single CPU device; the 8-way case is the subprocess test)
+    ("dense",    "batch", (1, 1), "distributed-batch",  (1, 1)),
+    ("ell",      "batch", (1, 1), "distributed-batch",  (1, 1)),
+    ("dense",    "topk",  (1, 1), "distributed-batch",  (1, 1)),
+]
+
+
+class TestPlannerDecisions:
+    @pytest.mark.parametrize("impl,kind,mesh,path,plan_mesh", PLAN_TABLE)
+    def test_backend_mesh_path_selection(self, g, P, impl, kind, mesh,
+                                         path, plan_mesh):
+        eng = PageRankEngine(g, EnginePlan(step_impl=impl, mesh=mesh))
+        query = {"rank": RankQuery(ItaConfig(xi=1e-10)),
+                 "batch": PPRQuery(p_batch=P),
+                 "topk": TopKQuery(sources=[1, 5], k=3)}[kind]
+        ep = eng.plan(query)
+        assert isinstance(ep, ExecutionPlan)
+        assert ep.backend == impl
+        assert ep.path == path
+        assert ep.mesh == plan_mesh
+        # explain() names the backend, the mesh layout, and why
+        text = ep.explain()
+        assert f"backend={impl}" in text
+        assert ("mesh=none (single device)" in text if plan_mesh is None
+                else f"mesh=({plan_mesh[0]}, {plan_mesh[1]})" in text)
+        assert "why:" in text and f"step_impl={impl!r}" in text
+
+    def test_power_batch_ignores_mesh(self, g, P):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense", mesh=(1, 1)))
+        ep = eng.plan(PPRQuery(p_batch=P, cfg=BatchConfig(
+            batch_method="power")))
+        assert ep.path == "batched-while-loop" and ep.mesh is None
+        assert any("power batch falls back" in r for r in ep.reasons)
+
+    def test_shard_batch_false_opts_out(self, g, P):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense", mesh=(1, 1)))
+        ep = eng.plan(PPRQuery(p_batch=P, cfg=BatchConfig(shard_batch=False)))
+        assert ep.path == "batched-while-loop" and ep.mesh is None
+        assert any("opted out" in r for r in ep.reasons)
+
+    def test_auto_selection_is_cost_based(self, g):
+        eng = PageRankEngine(g, EnginePlan(step_impl="auto"))
+        name, reason = choose_backend(dict(n=g.n, m=g.m))
+        assert eng.step_impl == name
+        assert "lowest est. cost" in eng.plan(RankQuery()).explain()
+        # on CPU the interpret-mode ELL penalty must keep dense cheapest
+        stats = dict(n=g.n, m=g.m)
+        assert (get_step_impl("dense").cost(stats)
+                < get_step_impl("ell").cost(stats))
+
+    def test_micro_batch_and_cost_recorded(self, g, P):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        ep = eng.plan(PPRQuery(p_batch=P))
+        assert ep.micro_batch == P.shape[0]
+        assert ep.cost > 0
+        ep_topk = eng.plan(TopKQuery(sources=[1, 2, 3, 4], k=2))
+        assert ep_topk.micro_batch == 4
+
+    def test_delta_plan(self, g):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        ep = eng.plan(DeltaQuery(add=((0, 7),)))
+        assert ep.path == "incremental" and ep.method == "ita_incremental"
+        assert any("cold start" in r for r in ep.reasons)
+
+    def test_direct_solvers_bypass_backend(self, g):
+        from repro.core import ForwardPushConfig, MonteCarloConfig
+
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        for cfg in (ForwardPushConfig(), MonteCarloConfig()):
+            ep = eng.plan(RankQuery(cfg))
+            assert ep.path == "direct" and ep.backend == "-"
+
+    def test_composite_plan(self, g, P):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        ep = eng.plan(BatchQuery((RankQuery(), PPRQuery(p_batch=P))))
+        assert ep.path == "composite" and len(ep.sub_plans) == 2
+        assert ep.sub_plans[0].path == "while-loop"
+        assert ep.sub_plans[1].path == "batched-while-loop"
+        assert "plan[rank]" in ep.explain() and "plan[ppr]" in ep.explain()
+
+    def test_describe_plan_opt_out(self, g):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        assert "plan" in eng.describe()
+        assert "backend=dense" in eng.describe()["plan"]
+        assert "plan" not in eng.describe(include_plan=False)
+
+    def test_capability_declarations(self):
+        assert get_step_impl("dense").capabilities().vertex_sharded_mesh
+        caps_f = get_step_impl("frontier").capabilities()
+        assert not caps_f.jittable
+        assert not caps_f.batch_parallel_mesh and not caps_f.donation
+        assert get_step_impl("ell").capabilities().jittable
+
+    def test_inconsistent_capability_declaration_rejected(self):
+        from repro.core import BackendCapabilities
+
+        # jittable=False with the donation/mesh defaults left True is the
+        # easy mistake a custom backend would make — it must fail at the
+        # declaration site, not as a tracer error mid-query
+        with pytest.raises(ValueError, match="requires jittable"):
+            BackendCapabilities(jittable=False)
+        ok = BackendCapabilities(jittable=False, donation=False,
+                                 batch_parallel_mesh=False)
+        assert not ok.jittable
+
+    def test_plan_error_contracts(self, g, P):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        with pytest.raises(TypeError):
+            eng.plan(RankQuery(BatchConfig()))
+        # method/config mismatch fires at PLAN time, not run time
+        with pytest.raises(TypeError, match="takes PowerConfig"):
+            eng.plan(RankQuery(ItaConfig(), method="power"))
+        with pytest.raises(TypeError):
+            eng.plan(PPRQuery(p_batch=P, cfg=ItaConfig()))
+        with pytest.raises(KeyError):
+            eng.plan(RankQuery(method="nope"))
+        with pytest.raises(KeyError):
+            eng.plan(PPRQuery(p_batch=P, cfg=BatchConfig(batch_method="x")))
+        with pytest.raises(ValueError, match="prepared 'dense'"):
+            eng.plan(RankQuery(ItaConfig(step_impl="ell")))
+        with pytest.raises(ValueError, match="p_batch must be"):
+            eng.plan(PPRQuery(p_batch=jnp.ones((g.n,))))
+        with pytest.raises(ValueError, match="k must be"):
+            eng.plan(TopKQuery(sources=[1], k=0))
+        with pytest.raises(TypeError):
+            eng.plan("not a query")
+        with pytest.raises(TypeError):
+            BatchQuery((BatchQuery(()),))
+
+
+# --------------------------------------------------------------------------
+# run(query) ≡ legacy methods / module-level solvers, bit for bit
+# --------------------------------------------------------------------------
+class TestRunParity:
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_rank_ita(self, g, impl):
+        eng = PageRankEngine(g, EnginePlan(step_impl=impl))
+        env = eng.run(RankQuery(ItaConfig(xi=1e-12)))
+        r_leg = ita(g, xi=1e-12, step_impl=impl)
+        assert np.array_equal(np.asarray(env.result.pi), np.asarray(r_leg.pi))
+        assert env.iterations == r_leg.iterations
+        assert env.converged and env.wall_time_s > 0
+        assert env.plan.backend == impl  # provenance travels with the result
+        assert np.array_equal(np.asarray(env.values), np.asarray(r_leg.pi))
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_rank_power(self, g, impl):
+        eng = PageRankEngine(g, EnginePlan(step_impl=impl))
+        env = eng.run(RankQuery(PowerConfig(tol=1e-12)))
+        r_leg = power_method(g, tol=1e-12, step_impl=impl)
+        assert np.array_equal(np.asarray(env.result.pi), np.asarray(r_leg.pi))
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    def test_ppr_batch(self, g, P, impl):
+        eng = PageRankEngine(g, EnginePlan(step_impl=impl))
+        env = eng.run(PPRQuery(p_batch=P, cfg=BatchConfig(xi=1e-12)))
+        rb_leg = solve_pagerank_batch(g, P, method="ita", xi=1e-12,
+                                      step_impl=impl)
+        assert np.array_equal(np.asarray(env.result.pi), np.asarray(rb_leg.pi))
+        assert env.iterations == rb_leg.iterations
+
+    def test_topk_matches_wrapper_and_batch(self, g):
+        eng1 = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        eng2 = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        env = eng1.run(TopKQuery(sources=[3, 17, 42], k=4))
+        tk = eng2.topk([3, 17, 42], k=4)
+        assert np.array_equal(np.asarray(env.result.indices),
+                              np.asarray(tk.indices))
+        assert np.array_equal(np.asarray(env.result.scores),
+                              np.asarray(tk.scores))
+        idx, scores = env.values
+        assert idx.shape == (3, 4) and scores.shape == (3, 4)
+
+    def test_delta_matches_update(self, g):
+        e1 = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        e2 = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        env = e1.run(DeltaQuery(add=((0, 7), (3, 11))))
+        r2 = e2.update(add=[(0, 7), (3, 11)])
+        assert np.array_equal(np.asarray(env.result.pi), np.asarray(r2.pi))
+        assert e1.graph.m == g.m + 2 and e1.prepare_count == 2
+        # second delta reuses the warm residual state
+        ep2 = e1.plan(DeltaQuery(remove=((0, 7),)))
+        assert any("warm" in r for r in ep2.reasons)
+
+    def test_composite_runs_in_order(self, g):
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        env = eng.run(BatchQuery((
+            RankQuery(ItaConfig(xi=1e-10)),
+            DeltaQuery(add=((1, 13),)),
+            RankQuery(ItaConfig(xi=1e-10)),
+        )))
+        assert isinstance(env, ResultEnvelope) and len(env.result) == 3
+        # the post-delta rank solved the NEW graph
+        r_after = env.result[2].result
+        r_ref = ita(eng.graph, xi=1e-10)
+        assert np.array_equal(np.asarray(r_after.pi), np.asarray(r_ref.pi))
+        assert eng.graph.m == g.m + 1
+
+    def test_wrappers_are_thin(self, g, P):
+        """solve/solve_batch return exactly run(...).result objects."""
+        eng = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        r = eng.solve(ItaConfig(xi=1e-10))
+        env = eng.run(RankQuery(ItaConfig(xi=1e-10)))
+        assert np.array_equal(np.asarray(r.pi), np.asarray(env.result.pi))
+        assert type(r) is type(env.result)
+        rb = eng.solve_batch(P)
+        envb = eng.run(PPRQuery(p_batch=P))
+        assert np.array_equal(np.asarray(rb.pi), np.asarray(envb.result.pi))
+
+
+# --------------------------------------------------------------------------
+# 8-device host mesh (subprocess): plan + parity on the sharded path
+# --------------------------------------------------------------------------
+def test_run_query_mesh8_plan_and_bitwise_parity():
+    """Acceptance bar: on the 8-device host mesh the planner picks the
+    distributed path and ``run(PPRQuery)`` stays bit-identical to the
+    unsharded legacy ``solve_batch``."""
+    out = run_py("""
+        import jax, json
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+        from repro.graph import web_graph
+        from repro.core import (PageRankEngine, EnginePlan, PPRQuery,
+                                TopKQuery, one_hot_personalizations)
+        g = web_graph(600, 4200, dangling_frac=0.2, seed=5)
+        P = one_hot_personalizations(g, [1, 7, 42, 99, 7, 311])
+        e0 = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        e1 = PageRankEngine(g, EnginePlan(step_impl="dense", mesh=(8, 1)))
+        ep = e1.plan(PPRQuery(p_batch=P))
+        env = e1.run(PPRQuery(p_batch=P))
+        r0 = e0.solve_batch(P)
+        t1 = e1.run(TopKQuery(sources=[1, 7, 42], k=5)).result
+        t0 = e0.topk([1, 7, 42], k=5)
+        text = ep.explain()
+        # C>1 capability gate: 'auto' resolves (-> dense on CPU, accepted),
+        # 'ell' is rejected with the ValueError, never a KeyError
+        from repro.core.distributed import ita_batch_distributed, resolve_mesh
+        mesh2d = resolve_mesh((4, 2))
+        try:
+            ita_batch_distributed(g, P[:2], mesh2d, xi=1e-8, step_impl="ell")
+            ell_rejected = False
+        except ValueError as e:
+            ell_rejected = "dense segment-sum" in str(e)
+        auto_ok = ita_batch_distributed(
+            g, P[:2], mesh2d, xi=1e-6, step_impl="auto").converged
+        print(json.dumps({
+            "ell_rejected": ell_rejected, "auto_ok": bool(auto_ok),
+            "path": ep.path, "mesh": list(ep.mesh),
+            "pi_equal": bool(jnp.array_equal(r0.pi, env.result.pi)),
+            "iters": [r0.iterations, env.iterations],
+            "topk_equal": bool(jnp.array_equal(t0.indices, t1.indices))
+                          and bool(jnp.array_equal(t0.scores, t1.scores)),
+            "explains_backend": "backend=dense" in text,
+            "explains_mesh": "mesh=(8, 1)" in text,
+            "explains_why": "why:" in text and "batch axis 8-way" in text}))
+    """)
+    assert out["path"] == "distributed-batch" and out["mesh"] == [8, 1], out
+    assert out["pi_equal"] and out["topk_equal"], out
+    assert out["iters"][0] == out["iters"][1], out
+    assert out["explains_backend"] and out["explains_mesh"], out
+    assert out["explains_why"], out
+    assert out["ell_rejected"] and out["auto_ok"], out
+
+
+# --------------------------------------------------------------------------
+# regression: apply_edge_delta must not leak stale ELL state
+# --------------------------------------------------------------------------
+def _absent_edge(g):
+    have = set(zip(np.asarray(g.src).tolist(), np.asarray(g.dst).tolist()))
+    for s in range(g.n):
+        for d in range(g.n):
+            if s != d and (s, d) not in have:
+                return (s, d)
+    raise AssertionError("graph is complete")
+
+
+class TestDeltaEllCache:
+    def test_delta_rebuilds_ell_cache(self):
+        g = web_graph(300, 2000, dangling_frac=0.2, seed=23)
+        g.ell()  # populate the OLD graph's cache
+        s, d = _absent_edge(g)
+        g2 = apply_edge_delta(g, add=[(s, d)])
+        # the new Graph starts with a fresh cache — never the old buckets
+        assert getattr(g2, "_ell_cache") == {}
+        r2 = ita(g2, xi=1e-12, step_impl="ell")
+        # reference: the same edge set built from scratch, no cache history
+        g3 = graph_from_edges(np.asarray(g2.src), np.asarray(g2.dst), g2.n)
+        r3 = ita(g3, xi=1e-12, step_impl="ell")
+        assert np.array_equal(np.asarray(r2.pi), np.asarray(r3.pi))
+
+    def test_engine_update_then_ell_solve(self):
+        g = web_graph(300, 2000, dangling_frac=0.2, seed=29)
+        eng = PageRankEngine(g, EnginePlan(step_impl="ell"))
+        s, d = _absent_edge(g)
+        eng.update(add=[(s, d)])
+        r = eng.solve(ItaConfig(xi=1e-12))
+        r_ref = ita(eng.graph, xi=1e-12, step_impl="ell")
+        assert np.array_equal(np.asarray(r.pi), np.asarray(r_ref.pi))
+        assert eng.graph.m == g.m + 1
