@@ -29,9 +29,20 @@ Three questions this answers on any hardware:
      executed.  ``--query-plan-json PATH`` records it
      (``benchmarks/BENCH_query_plan.json`` is the committed baseline);
      the acceptance bar is overhead ≤ 2%.
+  6. Sharded-ELL vs dense sharded — the two vertex-sharded (C > 1)
+     schedules on the same (R, 2) grid against the single-device batch.
+     ``--ell-sharded-json PATH`` records it
+     (``benchmarks/BENCH_ell_sharded.json`` is the committed entry); the
+     record is the agreement (``within_tol``) + overhead baseline —
+     interpret-mode Pallas wall-clock on a host mesh is a correctness
+     harness, not a speed claim.
 
 Committed ``BENCH_*.json`` baselines are schema-checked in CI by
-``benchmarks/check_bench_schema.py``.
+``benchmarks/check_bench_schema.py``, and the CI ``bench-drift`` job
+re-runs the JSON modes with ``--smoke`` (shrunk graph/batch) and
+drift-checks the fresh records against the committed ones with
+``check_bench_schema.py --compare`` — baselines are read on every PR,
+not write-only.
 
 CPU wall-clock caveats from benchmarks/common.py apply (interpret-mode
 Pallas is Python-slow by construction); iteration/op counts transfer.
@@ -190,6 +201,64 @@ def run_sharded(B: int = 16, *, n: int = 20_000, m: int = 160_000,
     )
 
 
+def run_ell_sharded(B: int = 8, *, n: int = 4_000, m: int = 24_000,
+                    xi: float = 1e-8, seed: int = 7,
+                    tol: float = 1e-8) -> dict:
+    """Sharded-ELL vs dense sharded vs single-device on an (R, 2) grid.
+
+    Default sizes are deliberately small: off-TPU the ELL kernel runs
+    interpret-mode (Python-slow by construction), so this record tracks
+    *agreement* of the two vertex-sharded schedules — ``within_tol`` must
+    stay true — plus their relative overhead, not absolute speed.  The
+    mesh is (n_dev // 2, 2): the widest batch axis that still exercises
+    C = 2 vertex sharding on whatever the host offers.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        raise SystemExit(
+            "run_ell_sharded needs > 1 device for a C=2 vertex-sharded "
+            "grid; set XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.core.distributed import ita_batch_distributed, resolve_mesh
+    from repro.core import ita_batch
+
+    g = web_graph(n, m, dangling_frac=0.15, seed=seed)
+    seeds = np.random.default_rng(0).choice(g.n, size=B, replace=False)
+    P = one_hot_personalizations(g, seeds)
+    mesh_shape = (n_dev // 2, 2)
+    mesh = resolve_mesh(mesh_shape)
+
+    r_single, t_single = timed(ita_batch, g, P, xi=xi, repeats=2)
+    r_dense, t_dense = timed(ita_batch_distributed, g, P, mesh, xi=xi,
+                             step_impl="dense", repeats=2)
+    r_ell, t_ell = timed(ita_batch_distributed, g, P, mesh, xi=xi,
+                         step_impl="ell", repeats=2)
+    err_vs_dense = float(jax.numpy.max(jax.numpy.abs(r_ell.pi - r_dense.pi)))
+    err_vs_single = float(jax.numpy.max(jax.numpy.abs(r_ell.pi - r_single.pi)))
+    return dict(
+        bench="ell_sharded",
+        graph=dict(n=g.n, m=g.m),
+        batch=B,
+        xi=xi,
+        tol=tol,
+        devices=n_dev,
+        mesh=list(mesh_shape),
+        platform=jax.default_backend(),
+        single_us=t_single * 1e6,
+        dense_sharded_us=t_dense * 1e6,
+        ell_sharded_us=t_ell * 1e6,
+        err_ell_vs_dense=err_vs_dense,
+        err_ell_vs_single=err_vs_single,
+        within_tol=bool(err_vs_dense < tol and err_vs_single < tol),
+        iterations=int(r_ell.iterations),
+        method=r_ell.method,
+        note="simulated host mesh + interpret-mode Pallas: the record is "
+             "the agreement baseline for the two vertex-sharded schedules "
+             "(within_tol must stay true); wall-clock ratios off-TPU are "
+             "an interpreter artifact, realized kernel speed needs "
+             "compiled Mosaic on real devices",
+    )
+
+
 def run_query_plan(B: int = 16, *, n: int = 20_000, m: int = 160_000,
                    xi: float = 1e-10, seed: int = 7) -> dict:
     """``engine.run(query)`` vs. the direct solver call, same prepared ctx.
@@ -247,6 +316,20 @@ def run_query_plan(B: int = 16, *, n: int = 20_000, m: int = 160_000,
     )
 
 
+# --smoke sizes for the JSON modes: small enough for a CI drift check
+# (minutes, not tens of minutes on one shared CPU), large enough that the
+# solves iterate to real convergence.  run_ell_sharded's defaults already
+# are its smoke sizes (interpret-mode Pallas, see its docstring).
+_SMOKE = dict(B=8, n=4_000, m=24_000)
+
+
+def _write_json(out: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(json.dumps(out, indent=2))
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -257,18 +340,25 @@ if __name__ == "__main__":
     ap.add_argument("--query-plan-json", default=None, metavar="PATH",
                     help="write the run_query_plan() engine.run-overhead "
                          "comparison to PATH instead of the row matrix")
+    ap.add_argument("--ell-sharded-json", default=None, metavar="PATH",
+                    help="write the run_ell_sharded() vertex-sharded "
+                         "schedule comparison to PATH instead of the "
+                         "row matrix")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink graph/batch for the JSON modes (the CI "
+                         "bench-drift shape; committed baselines note "
+                         "their own sizes)")
     args = ap.parse_args()
+    kw = dict(_SMOKE) if args.smoke else {}
     if args.sharded_json:
-        out = run_sharded()
-        with open(args.sharded_json, "w") as f:
-            json.dump(out, f, indent=2)
-            f.write("\n")
-        print(json.dumps(out, indent=2))
+        if kw:
+            kw["xi"] = 1e-8
+        _write_json(run_sharded(**kw), args.sharded_json)
     elif args.query_plan_json:
-        out = run_query_plan()
-        with open(args.query_plan_json, "w") as f:
-            json.dump(out, f, indent=2)
-            f.write("\n")
-        print(json.dumps(out, indent=2))
+        if kw:
+            kw["xi"] = 1e-8
+        _write_json(run_query_plan(**kw), args.query_plan_json)
+    elif args.ell_sharded_json:
+        _write_json(run_ell_sharded(), args.ell_sharded_json)
     else:
         print("\n".join(run()))

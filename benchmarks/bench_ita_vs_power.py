@@ -9,9 +9,13 @@ M(T) (Formula 15) — the quantity the paper's speedup is built on.
 """
 from __future__ import annotations
 
-import numpy as np
 
-from repro.core import err_max_rel, ita_traced, power_method, power_method_traced, reference_pagerank
+from repro.core import (
+    err_max_rel,
+    ita_traced,
+    power_method_traced,
+    reference_pagerank,
+)
 
 from .common import csv_row, load_datasets, timed
 

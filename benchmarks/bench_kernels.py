@@ -15,7 +15,7 @@ from repro.core.propagate import spmv_p
 from repro.graph import paper_dataset, web_graph
 from repro.sparse import ell_from_graph
 
-from .common import csv_row, timed
+from .common import csv_row
 
 
 def run(datasets=None) -> list[str]:

@@ -8,9 +8,8 @@ plus the walker-state memory MC carries (the paper's bandwidth column).
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import err_max_rel, ita, monte_carlo, reference_pagerank
+from repro.core import ita, monte_carlo, reference_pagerank
 from repro.graph import web_graph
 
 from .common import csv_row, timed

@@ -9,9 +9,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import err_max_rel, ita_traced, power_method_traced, reference_pagerank
+from repro.core import ita_traced, power_method_traced, reference_pagerank
 
-from .common import csv_row, load_datasets, timed
+from .common import csv_row, load_datasets
 
 
 def run(datasets=None) -> list[str]:

@@ -1,17 +1,31 @@
 #!/usr/bin/env python
-"""Validate committed ``benchmarks/BENCH_*.json`` baselines (CI docs job).
+"""Validate committed ``benchmarks/BENCH_*.json`` baselines (CI docs job)
+and compare fresh runs against them (CI bench-drift job).
 
     python benchmarks/check_bench_schema.py [FILES...]
+    python benchmarks/check_bench_schema.py --compare NEW BASELINE \
+        [--tol-scale X]
 
-Stdlib-only, so CI can run it before installing anything.  Every baseline
-must be valid JSON carrying the common keys plus the required keys of its
-``bench`` family below.  A baseline whose ``bench`` name has no schema
-fails — extend :data:`SCHEMAS` in the same PR that adds a new family, so
-the committed record set stays self-describing.  Exits 1 listing every
-violation.
+Stdlib-only, so CI can run it before installing anything.
+
+**Schema mode** (default): every baseline must be valid JSON carrying the
+common keys plus the required keys of its ``bench`` family below.  A
+baseline whose ``bench`` name has no schema fails — extend
+:data:`SCHEMAS` in the same PR that adds a new family, so the committed
+record set stays self-describing.  Exits 1 listing every violation.
+
+**Compare mode** (``--compare``): schema-checks both files, then applies
+the family's declared drift rules (:data:`DRIFT`) — correctness booleans
+must match exactly, tracked ratio keys must stay within a declared factor
+of the baseline, tracked absolute keys within a declared ± band.  The
+declared tolerances are deliberately wide (they catch "the path broke /
+the record rotted", not CI timer noise); ``--tol-scale`` widens or
+tightens them uniformly.  This is what stops the committed baselines from
+being write-only: a fresh smoke run is checked against them on every PR.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
@@ -31,14 +45,43 @@ SCHEMAS: dict[str, tuple] = {
         "within_2pct", "rank_direct_us", "rank_run_us",
         "rank_overhead_pct", "bit_identical", "plan", "note",
     ),
+    "ell_sharded": (
+        "graph", "batch", "xi", "tol", "devices", "mesh", "single_us",
+        "dense_sharded_us", "ell_sharded_us", "err_ell_vs_dense",
+        "err_ell_vs_single", "within_tol", "iterations", "method", "note",
+    ),
 }
 
 # per-key type expectations (applied when the key is present)
 _TYPES = {
     "bench": str, "platform": str, "graph": dict, "batch": int,
     "devices": int, "mesh": list, "iterations": int,
-    "bit_identical": bool, "within_2pct": bool, "method": str,
-    "note": str, "plan": str,
+    "bit_identical": bool, "within_2pct": bool, "within_tol": bool,
+    "method": str, "note": str, "plan": str,
+}
+
+# bench family -> drift rules for --compare:
+#   equal:    keys that must match the baseline exactly (correctness)
+#   ratio:    key -> max allowed factor between new and baseline (either way)
+#   absolute: key -> max allowed |new - baseline|
+DRIFT: dict[str, dict] = {
+    "ppr_sharded": dict(
+        equal=("bench", "bit_identical", "method"),
+        ratio={"speedup": 4.0},
+        absolute={},
+    ),
+    "query_plan": dict(
+        equal=("bench", "bit_identical"),
+        ratio={},
+        # overhead is a noisy CPU percentage; the band catches a planner
+        # that started re-tracing per query, not scheduler jitter
+        absolute={"overhead_pct": 25.0, "rank_overhead_pct": 25.0},
+    ),
+    "ell_sharded": dict(
+        equal=("bench", "within_tol", "method"),
+        ratio={},
+        absolute={},
+    ),
 }
 
 
@@ -72,9 +115,74 @@ def check_file(path: Path) -> list[str]:
     return problems
 
 
+def compare_files(new_path: Path, base_path: Path,
+                  tol_scale: float = 1.0) -> list[str]:
+    """Declared-tolerance drift check of a fresh run against a baseline."""
+    problems = check_file(new_path) + check_file(base_path)
+    if problems:
+        return problems
+    new = json.loads(new_path.read_text(encoding="utf-8"))
+    base = json.loads(base_path.read_text(encoding="utf-8"))
+    bench = base.get("bench")
+    if new.get("bench") != bench:
+        return [f"{new_path}: bench family {new.get('bench')!r} does not "
+                f"match baseline {bench!r}"]
+    rules = DRIFT.get(bench)
+    if rules is None:
+        return [f"{base_path}: no DRIFT rules declared for family "
+                f"{bench!r} — add them in the PR that adds the family"]
+    for k in rules["equal"]:
+        if new.get(k) != base.get(k):
+            problems.append(
+                f"{new_path}: {k!r} drifted — expected {base.get(k)!r} "
+                f"(baseline), got {new.get(k)!r}")
+    for k, factor in rules["ratio"].items():
+        factor = factor * tol_scale
+        nv, bv = float(new.get(k, 0.0)), float(base.get(k, 0.0))
+        if bv == 0.0:
+            continue
+        ratio = nv / bv
+        if not (1.0 / factor <= ratio <= factor):
+            problems.append(
+                f"{new_path}: {k!r} drifted {ratio:.3g}x from the "
+                f"baseline ({bv:.6g} -> {nv:.6g}); allowed factor "
+                f"{factor:.3g}")
+    for k, band in rules["absolute"].items():
+        band = band * tol_scale
+        nv, bv = float(new.get(k, 0.0)), float(base.get(k, 0.0))
+        if abs(nv - bv) > band:
+            problems.append(
+                f"{new_path}: {k!r} drifted by {abs(nv - bv):.6g} from "
+                f"the baseline ({bv:.6g} -> {nv:.6g}); allowed ±{band:.3g}")
+    return problems
+
+
 def main(argv: list[str]) -> int:
-    if argv:
-        files = [Path(a) for a in argv]
+    ap = argparse.ArgumentParser(
+        description="schema-check BENCH_*.json baselines, or --compare a "
+                    "fresh run against one")
+    ap.add_argument("files", nargs="*", help="baselines to schema-check "
+                    "(default: every benchmarks/BENCH_*.json)")
+    ap.add_argument("--compare", nargs=2, metavar=("NEW", "BASELINE"),
+                    default=None,
+                    help="drift-check NEW against BASELINE with the "
+                         "family's declared tolerances")
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="uniform multiplier on the declared drift "
+                         "tolerances (default 1.0)")
+    args = ap.parse_args(argv)
+
+    if args.compare:
+        new_path, base_path = (Path(a) for a in args.compare)
+        problems = compare_files(new_path, base_path, args.tol_scale)
+        for p in problems:
+            print(p)
+        print(f"compared {new_path} vs {base_path}: "
+              f"{'FAIL' if problems else 'ok'} ({len(problems)} problem(s))")
+        return 1 if problems else 0
+
+    if args.files:
+        files = [Path(a) for a in args.files]
     else:
         files = sorted(Path(__file__).resolve().parent.glob("BENCH_*.json"))
     if not files:

@@ -1,6 +1,5 @@
 """meshgraphnet [gnn]: 15 layers, d_hidden=128, sum aggregator, 2-layer MLPs
 [arXiv:2010.03409]."""
-import dataclasses
 
 from ..models.gnn.meshgraphnet import MGNConfig
 from .registry import ArchSpec, GNN_CELLS, register_arch

@@ -99,7 +99,9 @@ class BackendCapabilities:
         (requires ``jittable``).
     vertex_sharded_mesh : bool
         implements the C-way column-sharded (C > 1) push schedule of
-        ``core/distributed.py`` (currently the dense segment-sum only).
+        ``core/distributed.py`` ("dense" via the ``partition_cols``
+        segment-sum, "ell" via per-block bucketed tiles through the
+        batched Pallas kernel).
     dtypes : tuple[str, ...]
         value dtypes the push is validated for.
     """
@@ -219,7 +221,8 @@ def available_step_impls(jittable_only: bool = False) -> list[str]:
 
 
 def choose_backend(stats: Optional[dict] = None, cfg=None, *,
-                   jittable_only: bool = True) -> tuple[str, str]:
+                   jittable_only: bool = True,
+                   require: tuple = ()) -> tuple[str, str]:
     """Cost-based backend selection over the declared capability rows.
 
     Returns ``(name, reason)`` — the registered backend with the lowest
@@ -228,22 +231,34 @@ def choose_backend(stats: Optional[dict] = None, cfg=None, *,
     hijacks ``step_impl="auto"``).  ``jittable_only`` restricts the pool
     to backends whose push can live inside the device-resident loop —
     the "auto" contract, since a host-driven layout must be an explicit
-    opt-in.  This replaces the hard-coded platform switch: on TPU the
-    Mosaic ELL kernel's declared cost undercuts dense, elsewhere the
-    interpret-mode penalty keeps dense cheapest — same answers, but now
-    derived from declarations a new backend can participate in.
+    opt-in.  ``require`` names additional :class:`BackendCapabilities`
+    flags every candidate must declare (e.g. ``("vertex_sharded_mesh",)``
+    when the engine prepares an (R, C) mesh with C > 1), and ``stats`` may
+    carry a ``"mesh"`` entry — the normalized (R, C) — that mesh-aware
+    cost models read.  This replaces the hard-coded platform switch: on
+    TPU the Mosaic ELL kernel's declared cost undercuts dense, elsewhere
+    the interpret-mode penalty keeps dense cheapest — same answers, but
+    now derived from declarations a new backend can participate in.
     """
     cands = []
     for name, b in STEP_IMPLS.items():
-        if jittable_only and not b.capabilities().jittable:
+        caps = b.capabilities()
+        if jittable_only and not caps.jittable:
+            continue
+        if any(not getattr(caps, r) for r in require):
             continue
         cands.append((b.cost(stats, cfg), 0 if name == "dense" else 1, name))
     if not cands:
-        raise RuntimeError("no eligible backend registered")
+        raise RuntimeError(
+            "no eligible backend registered"
+            + (f" (require={list(require)})" if require else ""))
     cost, _, name = min(cands)
     others = ", ".join(f"{n}={c:.3g}" for c, _, n in sorted(cands))
-    return name, (f"lowest est. cost among jittable backends ({others}; "
-                  f"platform={jax.default_backend()})")
+    mesh = (stats or {}).get("mesh")
+    return name, (f"lowest est. cost among eligible backends ({others}; "
+                  f"platform={jax.default_backend()}"
+                  + (f"; mesh={tuple(mesh)}" if mesh else "")
+                  + (f"; require={list(require)}" if require else "") + ")")
 
 
 def resolve_step_impl(name: Optional[str]) -> str:
@@ -268,8 +283,9 @@ class DenseBackend(StepBackend):
     """Sorted segment-sum over the full dst-sorted COO edge list."""
 
     def capabilities(self) -> BackendCapabilities:
-        # the one schedule the C>1 column-sharded distributed pass
-        # implements (core/distributed.py), hence vertex_sharded_mesh.
+        # the paper-faithful C>1 column-sharded schedule (partition_cols
+        # COO blocks + segment-sum, core/distributed.py), hence
+        # vertex_sharded_mesh.
         return BackendCapabilities(vertex_sharded_mesh=True)
 
     def push(self, g: Graph, ctx, w: jnp.ndarray) -> jnp.ndarray:
@@ -288,11 +304,29 @@ class DenseBackend(StepBackend):
 class EllBackend(StepBackend):
     """Bucketed-ELL layout, Pallas kernel on the push (repro.kernels)."""
 
+    def capabilities(self) -> BackendCapabilities:
+        # the column-sharded (C > 1) push now has an ELL realisation —
+        # Graph.ell_partitioned(C) blocks through _batch_2d_ell_loop in
+        # core/distributed.py — so the layout serves every mesh shape.
+        return BackendCapabilities(vertex_sharded_mesh=True)
+
     def cost(self, stats: Optional[dict] = None, cfg=None) -> float:
         # Mosaic-compiled tiles undercut the gather+segment-sum per edge;
         # off-TPU the kernel runs interpret-mode (Python-slow) — a large
-        # declared penalty keeps "auto" away from it there.
-        factor = 0.35 if jax.default_backend() == "tpu" else 50.0
+        # declared penalty keeps "auto" away from it there.  On a C-way
+        # vertex-sharded mesh (stats carries the normalized (R, C)) the
+        # kernel factor is declared unconditionally: that layout exists
+        # for scale-out serving where the per-block tiles are streamed
+        # once per round for the whole batch shard, and the production
+        # target is the compiled kernel — a CPU host mesh is a CI
+        # simulation of it, so "auto" plans for the hardware the layout
+        # is for rather than the interpreter that fakes it.
+        mesh = (stats or {}).get("mesh")
+        C = int(mesh[1]) if mesh is not None and len(tuple(mesh)) == 2 else 1
+        if C > 1 or jax.default_backend() == "tpu":
+            factor = 0.35
+        else:
+            factor = 50.0
         return super().cost(stats, cfg) * factor
 
     def prepare(self, g: Graph):

@@ -28,7 +28,7 @@ Batched PPR (``ita_batch_distributed``): the serving shape.  A [B, n]
     R = 1 (``graph/partition.partition_cols``).  The per-step schedule is
     ``make_ita_2d_step``'s lifted to [B, n] state:
 
-        local segment-sum over the column edge block   [compute]
+        local push over the column edge block          [compute]
         psum_scatter over "model"                      [B/R · n/C each]
 
     with the row all-gather of the single-vector layout replaced by batch
@@ -36,15 +36,28 @@ Batched PPR (``ita_batch_distributed``): the serving shape.  A [B, n]
     collective at all).  With C == 1 the vertex axis stays whole and each
     device simply runs the registered backend's ``push_batch`` on its
     batch shard, so results are bit-identical to ``core.batch.ita_batch``
-    per backend (asserted in tests/test_batch_distributed.py).  See
-    docs/SHARDING.md for the layout diagrams and byte counts.
+    per backend (asserted in tests/test_batch_distributed.py).
+
+    The C > 1 local push has two realisations, dispatched on the resolved
+    ``step_impl`` (both declare ``vertex_sharded_mesh``):
+
+      * ``"dense"`` — masked segment-sum over the block's COO edges
+        (``partition_cols`` arrays, ``_batch_2d_loop``);
+      * ``"ell"``   — per-block bucketed-ELL tiles through the batched
+        Pallas kernel (``Graph.ell_partitioned(C)`` →
+        ``spmv_ell_cols_local_batch``, ``_batch_2d_ell_loop``), the same
+        kernel the single-device fast path runs, now fed block-local
+        operands.  Cross-column reduction is the identical psum_scatter,
+        so the two schedules agree to solver tolerance and either agrees
+        with the single-device batch to ~xi.
+
+    See docs/SHARDING.md for the layout diagrams and byte counts.
 
 ``build_pagerank_job`` exposes the 2-D step as a LoweringJob so the
 paper's own workload participates in the multi-pod dry-run + roofline.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from functools import lru_cache, partial
 from typing import Optional
@@ -55,21 +68,26 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from ..graph.partition import (
-    Partition1D,
-    Partition2D,
-    partition_1d,
-    partition_2d,
-    partition_cols,
-)
+from ..graph.partition import partition_1d, partition_2d, partition_cols
 from ..graph.structure import Graph
-from .backends import get_step_impl, resolve_step_impl
+from .backends import (
+    STEP_IMPLS,
+    choose_backend,
+    get_step_impl,
+)
 from .batch import BatchSolverResult, _batch_ita_step
 from .metrics import SolverResult
 
 __all__ = ["ita_distributed_1d", "ita_distributed_2d", "build_pagerank_job",
-           "make_ita_2d_step", "make_ita_batch_step", "ita_batch_distributed",
+           "make_ita_2d_step", "make_ita_batch_step",
+           "make_ita_batch_ell_step", "ita_batch_distributed",
            "resolve_mesh"]
+
+
+def _vertex_sharded_impls() -> list[str]:
+    """Registered backends declaring the C-way column-sharded schedule."""
+    return sorted(n for n, b in STEP_IMPLS.items()
+                  if b.capabilities().vertex_sharded_mesh)
 
 
 def resolve_mesh(spec, *, batch_axis: str = "data",
@@ -324,6 +342,94 @@ def make_ita_batch_step(mesh: Mesh, part_shapes: dict, c: float, xi: float,
     )
 
 
+# --- column-sharded ELL: the bucketed-kernel realisation of the C>1 push ---
+def _ell_spec_list(sig, col_axis: str) -> tuple:
+    """PartitionSpecs for the flattened ELLCols leaves, leading axis = C."""
+    _, _, _, bucket_sig, ovf_pad = sig
+    specs = []
+    for _rows, _k in bucket_sig:
+        specs.append(P(col_axis, None))           # row_ids [C, rows]
+        specs.append(P(col_axis, None, None))     # src_idx [C, rows, k]
+    if ovf_pad:
+        specs.append(P(col_axis, None))           # ovf_src [C, ovf_pad]
+        specs.append(P(col_axis, None))           # ovf_dst [C, ovf_pad]
+    return tuple(specs)
+
+
+def _ell_leaf_list(ellc) -> tuple:
+    """The ELLCols arrays in the order ``_ell_spec_list`` declares."""
+    leaves = []
+    for b in ellc.buckets:
+        leaves += [b.row_ids, b.src_idx]
+    if ellc.ovf_src.shape[-1]:
+        leaves += [ellc.ovf_src, ellc.ovf_dst]
+    return tuple(leaves)
+
+
+def _ita_batch_2d_ell_body(sig, c: float, xi: float, batch_axis: str,
+                           col_axis: str):
+    """Per-device body of one vertex-sharded batched ITA round, ELL layout.
+
+    Identical elementwise prologue and psum_scatter epilogue to
+    :func:`_ita_batch_2d_body`; only the local push differs — the block's
+    bucketed-ELL tiles through the batched Pallas kernel instead of a
+    segment-sum over the block's COO edges.  ``sig`` is
+    ``ELLCols.signature()``; the flattened leaves arrive with a local
+    leading axis of 1 (their [C, ...] arrays sharded over ``col_axis``).
+    """
+    from ..kernels.spmv_ell import spmv_ell_cols_local_batch
+
+    n_pad, _nc, _C, bucket_sig, ovf_pad = sig
+    nb = len(bucket_sig)
+
+    def step(H, PiBar, inv_deg, nd, *ell_ops):
+        buckets = [(ell_ops[2 * i][0], ell_ops[2 * i + 1][0])
+                   for i in range(nb)]
+        if ovf_pad:
+            ovf_src, ovf_dst = ell_ops[2 * nb][0], ell_ops[2 * nb + 1][0]
+        else:
+            ovf_src = ovf_dst = None
+        active = jnp.logical_and(H > xi, nd[None, :])
+        H_act = jnp.where(active, H, 0)
+        PiBar = PiBar + H_act
+        W = H_act * inv_deg[None, :] * c
+        Wp = jnp.concatenate([W, jnp.zeros((W.shape[0], 1), W.dtype)], axis=1)
+        partial_r = spmv_ell_cols_local_batch(
+            Wp, buckets, ovf_src, ovf_dst, n_pad)          # [B_loc, n_pad]
+        Y = jax.lax.psum_scatter(partial_r.T, col_axis, scatter_dimension=0,
+                                 tiled=True)               # [nc, B_loc]
+        H = jnp.where(active, 0, H) + Y.T
+        n_active = jax.lax.psum(jnp.sum(active, dtype=jnp.int32),
+                                (batch_axis, col_axis))
+        return H, PiBar, n_active
+
+    return step
+
+
+def make_ita_batch_ell_step(mesh: Mesh, ellc, c: float, xi: float,
+                            batch_axis: str = "data",
+                            col_axis: str = "model"):
+    """One shard_mapped vertex-sharded batched ITA round over the ELL
+    blocks — the single-round form of ``_batch_2d_ell_loop``, exposed so
+    tests can assert round-for-round parity with the dense schedule.
+
+    Operands: ``(H, PiBar)`` [B_pad, n_pad] P(batch, col), the ELLCols
+    leaves (P(col, None...)), then ``inv_deg`` / ``nd`` [n_pad] P(col) —
+    call as ``step(H, PiBar, inv_deg, nd, *_ell_leaf_list(ellc))``.
+    """
+    sig = ellc.signature()
+    state_spec = P(batch_axis, col_axis)
+    vec_spec = P(col_axis)
+    return shard_map(
+        _ita_batch_2d_ell_body(sig, c, xi, batch_axis, col_axis),
+        mesh=mesh,
+        in_specs=(state_spec, state_spec, vec_spec, vec_spec,
+                  *_ell_spec_list(sig, col_axis)),
+        out_specs=(state_spec, state_spec, P()),
+        check_rep=False,
+    )
+
+
 # The loop builders are lru_cached on their static identity (mesh objects
 # hash by device grid + axis names, backend instances by identity) so a
 # serving engine's repeated solve_batch calls reuse ONE traced program:
@@ -398,6 +504,42 @@ def _batch_2d_loop(mesh: Mesh, nr: int, c: float, xi: float, max_iter: int,
     ))
 
 
+@lru_cache(maxsize=None)
+def _batch_2d_ell_loop(mesh: Mesh, sig, c: float, xi: float, max_iter: int,
+                       batch_axis: str, col_axis: str):
+    """Fused quiescence loop around :func:`_ita_batch_2d_ell_body`.
+
+    Cached on the static geometry (``ELLCols.signature()``) instead of the
+    operand arrays, exactly like ``_batch_2d_loop`` caches on ``nr`` — a
+    serving engine's repeated solve_batch calls reuse ONE traced program.
+    """
+    state_spec = P(batch_axis, col_axis)
+    vec_spec = P(col_axis)
+    step = _ita_batch_2d_ell_body(sig, c, xi, batch_axis, col_axis)
+
+    def local_loop(H0, inv_deg, nd, *ell_ops):
+        def cond(state):
+            _, _, n_active, it = state
+            return jnp.logical_and(n_active > 0, it < max_iter)
+
+        def body(state):
+            H, PiBar, _, it = state
+            H, PiBar, n_active = step(H, PiBar, inv_deg, nd, *ell_ops)
+            return H, PiBar, n_active, it + 1
+
+        init = (H0, jnp.zeros_like(H0), jnp.asarray(1, jnp.int32),
+                jnp.asarray(0, jnp.int32))
+        return jax.lax.while_loop(cond, body, init)
+
+    return jax.jit(shard_map(
+        local_loop, mesh=mesh,
+        in_specs=(state_spec, vec_spec, vec_spec,
+                  *_ell_spec_list(sig, col_axis)),
+        out_specs=(state_spec, state_spec, P(), P()),
+        check_rep=False,
+    ))
+
+
 def _partition_cols_cached(g: Graph, C: int):
     """Per-graph cache for the column partition (same idiom as Graph.ell:
     host-side O(m) conversion paid once per (graph, C), invisible to the
@@ -440,6 +582,41 @@ def _batch_2d_operands_cached(g: Graph, mesh: Mesh, C: int, dtype,
     return part, cache[key]
 
 
+def _ell_cols_operands_cached(g: Graph, mesh: Mesh, C: int, dtype,
+                              col_axis: str, widths: tuple, row_align: int):
+    """Device-placed column-block ELL operands, cached per (graph, grid).
+
+    Same prepare-once contract as ``_batch_2d_operands_cached``: the
+    host-side bucketing comes from the ``Graph.ell_partitioned`` cache,
+    and the sharded device placement (leaves over ``col_axis``, masks
+    column-sharded) is paid once per (mesh, C, dtype) — not per solve.
+    """
+    ellc = g.ell_partitioned(C, widths=widths, row_align=row_align)
+    cache = getattr(g, "_part_cols_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(g, "_part_cols_cache", cache)
+    key = ("ell", mesh, C, jnp.dtype(dtype).name, col_axis,
+           tuple(sorted(widths)), int(row_align))
+    if key not in cache:
+        deg = np.asarray(g.out_deg)
+        inv_nat = np.zeros(ellc.n_pad, np.float64)
+        inv_nat[: g.n] = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
+        nd_nat = np.zeros(ellc.n_pad, bool)
+        nd_nat[: g.n] = deg > 0
+        vec_sh = NamedSharding(mesh, P(col_axis))
+        leaves = tuple(
+            jax.device_put(leaf, NamedSharding(
+                mesh, P(col_axis, *([None] * (leaf.ndim - 1)))))
+            for leaf in _ell_leaf_list(ellc))
+        cache[key] = (
+            leaves,
+            jax.device_put(jnp.asarray(inv_nat.astype(dtype)), vec_sh),
+            jax.device_put(jnp.asarray(nd_nat), vec_sh),
+        )
+    return ellc, cache[key]
+
+
 def ita_batch_distributed(
     g: Graph,
     p_batch,
@@ -453,6 +630,8 @@ def ita_batch_distributed(
     ctx=None,
     batch_axis: str = "data",
     col_axis: str = "model",
+    ell_widths: tuple = (8, 32, 128),
+    row_align: int = 8,
 ) -> BatchSolverResult:
     """Mesh-sharded multi-source ITA: ``p_batch`` is [B, n], one row per query.
 
@@ -465,12 +644,18 @@ def ita_batch_distributed(
         layout) is accepted and the result is bit-identical to
         :func:`repro.core.batch.ita_batch` with the same backend.
       * C > 1: **batch × vertex**.  Additionally shards the [B, n] state
-        and the edge blocks over ``col_axis`` via ``partition_cols`` (per-
-        device state is B/R × n/C) with the psum_scatter schedule of
-        ``make_ita_2d_step``.  The cross-column reduction regroups the
-        float sums, so agreement with the single-device solve is to solver
-        tolerance (~xi), not bitwise; only the dense segment-sum schedule
-        is implemented (``step_impl`` must be "dense").
+        and the edge blocks over ``col_axis`` (per-device state is
+        B/R × n/C) with the psum_scatter schedule of ``make_ita_2d_step``.
+        The cross-column reduction regroups the float sums, so agreement
+        with the single-device solve is to solver tolerance (~xi), not
+        bitwise.  The local push dispatches on the backend (which must
+        declare ``vertex_sharded_mesh``): "dense" runs the segment-sum
+        over ``partition_cols`` COO blocks, "ell" the per-block
+        bucketed-ELL tiles through the batched Pallas kernel
+        (``Graph.ell_partitioned(C)``; ``ell_widths`` / ``row_align``
+        select the bucketing).  ``step_impl="auto"``/``None`` picks by
+        declared cost among vertex-sharded backends (``choose_backend``),
+        which prefers the ELL tiles on the sharded layout.
 
     B is padded up to a multiple of R with all-zero rows (quiet from step
     0 — they change neither the iteration count nor any real row).
@@ -489,6 +674,9 @@ def ita_batch_distributed(
 
     t0 = time.perf_counter()
     if C == 1:
+        if step_impl in (None, "auto"):
+            step_impl, _ = choose_backend(dict(n=g.n, m=g.m, mesh=(R, 1)),
+                                          require=("batch_parallel_mesh",))
         backend = get_step_impl(step_impl)
         if not backend.capabilities().batch_parallel_mesh:
             raise ValueError(
@@ -505,23 +693,45 @@ def ita_batch_distributed(
         H, PiBar, n_active, it = run(g, ctx, H0, inv_deg, nd)
         method = f"ita_batch_dist[{step_impl}|{R}x1]"
     else:
-        if step_impl is not None:
-            impl = resolve_step_impl(step_impl)  # "auto" -> platform pick
+        if step_impl in (None, "auto"):
+            impl, _ = choose_backend(dict(n=g.n, m=g.m, mesh=(R, C)),
+                                     require=("vertex_sharded_mesh",))
+        else:
+            impl = step_impl
             if not get_step_impl(impl).capabilities().vertex_sharded_mesh:
                 raise ValueError(
-                    f"vertex-sharded batched ITA (C={C}) implements the "
-                    f"dense segment-sum schedule only (capability "
-                    f"vertex_sharded_mesh); got step_impl={step_impl!r}")
-        part, (src_d, dst_d, ideg, nd) = _batch_2d_operands_cached(
-            g, mesh, C, dtype, col_axis)
-        run = _batch_2d_loop(mesh, part.nr, float(c), float(xi),
-                             int(max_iter), batch_axis, col_axis)
-        if part.n_pad != g.n:
+                    f"vertex-sharded batched ITA (C={C}) needs a backend "
+                    f"declaring vertex_sharded_mesh (registered: "
+                    f"{_vertex_sharded_impls()}); got "
+                    f"step_impl={step_impl!r}")
+        if impl == "ell":
+            ellc, (leaves, ideg, nd) = _ell_cols_operands_cached(
+                g, mesh, C, dtype, col_axis, tuple(ell_widths),
+                int(row_align))
+            run = _batch_2d_ell_loop(mesh, ellc.signature(), float(c),
+                                     float(xi), int(max_iter), batch_axis,
+                                     col_axis)
+            n_pad, operands = ellc.n_pad, (ideg, nd, *leaves)
+        elif impl == "dense":
+            part, (src_d, dst_d, ideg, nd) = _batch_2d_operands_cached(
+                g, mesh, C, dtype, col_axis)
+            run = _batch_2d_loop(mesh, part.nr, float(c), float(xi),
+                                 int(max_iter), batch_axis, col_axis)
+            n_pad, operands = part.n_pad, (src_d, dst_d, ideg, nd)
+        else:
+            # a custom backend may declare the capability without having a
+            # column-sharded realisation registered here — fail loudly
+            # rather than silently densifying.
+            raise ValueError(
+                f"backend {impl!r} declares vertex_sharded_mesh but no "
+                f"column-sharded schedule is registered for it in "
+                f"core/distributed.py (implemented: ['dense', 'ell'])")
+        if n_pad != g.n:
             H0 = jnp.concatenate(
-                [H0, jnp.zeros((B_pad, part.n_pad - g.n), dtype)], axis=1)
+                [H0, jnp.zeros((B_pad, n_pad - g.n), dtype)], axis=1)
         H0 = jax.device_put(H0, NamedSharding(mesh, P(batch_axis, col_axis)))
-        H, PiBar, n_active, it = run(H0, src_d, dst_d, ideg, nd)
-        method = f"ita_batch_dist[dense|{R}x{C}]"
+        H, PiBar, n_active, it = run(H0, *operands)
+        method = f"ita_batch_dist[{impl}|{R}x{C}]"
 
     it = int(it)
     PiBar = PiBar + H
@@ -558,7 +768,6 @@ def build_pagerank_job(spec, cell, mesh: Mesh):
 
     col_spec = P(col_axis)
     edge_spec = P(row_axis, col_axis, None)
-    Rdim = R if not isinstance(row_axis, tuple) else R
 
     def step(h, pi_bar, src_blk, dst_blk, inv_deg, nd):
         src_blk, dst_blk = src_blk[0, 0], dst_blk[0, 0]

@@ -37,7 +37,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..graph.structure import Graph
 from .backends import get_step_impl, run_ita_loop

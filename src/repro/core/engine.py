@@ -85,7 +85,7 @@ from .query import (
     TopKQuery,
     plan_query,
 )
-from .solver_config import BatchConfig, SolverConfig, make_config
+from .solver_config import BatchConfig, SolverConfig
 
 __all__ = ["EnginePlan", "PageRankEngine", "TopKResult"]
 
@@ -109,8 +109,11 @@ class EnginePlan:
     capabilities: serving under ``shard_map`` needs
     ``batch_parallel_mesh`` (the host-driven "frontier" declares it
     false), and C-way vertex sharding (C > 1) needs
-    ``vertex_sharded_mesh`` — currently declared by "dense" only, the one
-    schedule the column-sharded pass implements.
+    ``vertex_sharded_mesh`` — declared by "dense" (partition_cols
+    segment-sum) and "ell" (per-block bucketed tiles through the batched
+    Pallas kernel).  With ``step_impl="auto"`` the choice is mesh-aware:
+    on a C > 1 grid the pool narrows to vertex-sharded backends and the
+    ELL kernel's declared sharded cost wins (see ``EllBackend.cost``).
     """
 
     step_impl: Optional[str] = "auto"
@@ -153,9 +156,25 @@ class PageRankEngine:
         the device grid once so every query reuses the placement."""
         self.graph = g
         plan = self.engine_plan
+        # mesh geometry first: the backend choice is mesh-aware (an (R, C)
+        # grid with C > 1 restricts "auto" to vertex-sharded backends and
+        # flips the ELL kernel's declared cost in their favour).
+        self.mesh = resolve_mesh(plan.mesh)
+        self._mesh_shape = None
+        if self.mesh is not None:
+            C = (self.mesh.shape["model"]
+                 if "model" in self.mesh.axis_names else 1)
+            # normalized (R, C) grid — a user-supplied single-axis Mesh
+            # has a 1-length devices.shape, so derive from the axes.
+            self._mesh_shape = (self.mesh.shape["data"], C)
         if plan.step_impl in (None, "auto"):
+            require = ()
+            if self._mesh_shape is not None:
+                require = (("batch_parallel_mesh", "vertex_sharded_mesh")
+                           if self._mesh_shape[1] > 1
+                           else ("batch_parallel_mesh",))
             self.step_impl, self._backend_reason = choose_backend(
-                dict(n=g.n, m=g.m))
+                dict(n=g.n, m=g.m, mesh=self._mesh_shape), require=require)
         else:
             self.step_impl = resolve_step_impl(plan.step_impl)
             self._backend_reason = "explicit EnginePlan(step_impl=...) request"
@@ -175,30 +194,40 @@ class PageRankEngine:
                               row_align=plan.row_align)
         else:
             self._ctx = self.backend.prepare(g)
-        self.mesh = resolve_mesh(plan.mesh)
-        self._mesh_shape = None
         if self.mesh is not None:
             if not self.caps.batch_parallel_mesh:
                 raise ValueError(
                     f"EnginePlan(mesh=...) needs a jittable backend; "
                     f"{self.step_impl!r} is host-driven and cannot run "
                     f"under shard_map (declared batch_parallel_mesh=False)")
-            C = (self.mesh.shape["model"]
-                 if "model" in self.mesh.axis_names else 1)
-            # normalized (R, C) grid — a user-supplied single-axis Mesh
-            # has a 1-length devices.shape, so derive from the axes.
-            self._mesh_shape = (self.mesh.shape["data"], C)
+            C = self._mesh_shape[1]
             if C > 1 and not self.caps.vertex_sharded_mesh:
+                from .distributed import _vertex_sharded_impls
                 raise ValueError(
-                    f"vertex sharding (mesh model axis = {C}) implements "
-                    f"the dense schedule only; {self.step_impl!r} does not "
-                    f"declare vertex_sharded_mesh — prepare the engine "
-                    f"with step_impl='dense'")
+                    f"vertex sharding (mesh model axis = {C}) needs a "
+                    f"backend declaring vertex_sharded_mesh (registered: "
+                    f"{_vertex_sharded_impls()}); {self.step_impl!r} does "
+                    f"not — prepare the engine with one of those")
+            if C > 1 and self.step_impl == "ell":
+                # prepare-once: the column-block bucketing the sharded
+                # serving path consumes is host-side O(m) work — pay it
+                # here, not on the first query.
+                g.ell_partitioned(C, widths=plan.ell_widths,
+                                  row_align=plan.row_align)
             # replicate the prepared context and graph operands onto the
             # grid once; shard_map then never reshards them per query.
             rep = NamedSharding(self.mesh, PartitionSpec())
             self._ctx = jax.device_put(self._ctx, rep)
             self.graph = jax.device_put(g, rep)
+            # device_put builds a NEW Graph pytree, which would silently
+            # drop the host-side layout caches (same edge set, so the
+            # cached conversions stay valid) — transplant them so the
+            # prepare-time warming above actually serves the queries.
+            for attr in ("_ell_cache", "_ell_part_cache",
+                         "_part_cols_cache"):
+                cache = getattr(g, attr, None)
+                if cache is not None:
+                    object.__setattr__(self.graph, attr, cache)
         self._compiled.clear()  # traces close over the old graph's buffers
         self.prepare_count += 1
 
@@ -320,7 +349,9 @@ class PageRankEngine:
             return ita_batch_distributed(
                 self.graph, p_batch, self.mesh, c=cfg.c, xi=cfg.xi,
                 max_iter=cfg.max_iter, dtype=cfg.dtype,
-                step_impl=self.step_impl, ctx=self._ctx)
+                step_impl=self.step_impl, ctx=self._ctx,
+                ell_widths=self.engine_plan.ell_widths,
+                row_align=self.engine_plan.row_align)
         if ep.path == "donated-batch":
             return self._solve_batch_donated(p_batch, cfg)
         fn = ita_batch if cfg.batch_method == "ita" else power_method_batch

@@ -325,20 +325,36 @@ def _plan_batch_common(state: PlannerState, cfg, B: int, kind: str
                f"({state.backend_reason})",
                f"capabilities: {caps.summary()}"]
     stats = dict(n=state.n, m=state.m)
-    cost = get_step_impl(state.step_impl).cost(stats, cfg)
+    backend_obj = get_step_impl(state.step_impl)
+    cost = backend_obj.cost(stats, cfg)
     mesh = None
     if (state.mesh_shape is not None and cfg.shard_batch
             and cfg.batch_method == "ita" and caps.batch_parallel_mesh):
         mesh = state.mesh_shape
         path = "distributed-batch"
         R, C = mesh
-        reasons.append(
-            f"mesh {mesh} from EnginePlan and shard_batch=True: "
-            f"batch axis {R}-way on 'data'"
-            + (f", vertex axis {C}-way on 'model' "
-               f"(dense schedule, declared vertex_sharded_mesh)" if C > 1
-               else " (vertex axis whole; per-device push_batch, "
-                    "bit-identical)"))
+        if C > 1:
+            schedule = ("sharded-ELL column blocks: Graph.ell_partitioned"
+                        f"({C}) tiles through the batched Pallas kernel"
+                        if state.step_impl == "ell" else
+                        "dense segment-sum over partition_cols blocks")
+            reasons.append(
+                f"mesh {mesh} from EnginePlan and shard_batch=True: "
+                f"batch axis {R}-way on 'data', vertex axis {C}-way on "
+                f"'model' ({schedule}; declared vertex_sharded_mesh)")
+            # sharded cost model: each device streams its m/C edge block
+            # per round; mesh-aware backend costs (EllBackend) see the
+            # grid via the "mesh" stats entry.
+            cost = backend_obj.cost(
+                dict(n=state.n, m=max(1, state.m // C), mesh=mesh), cfg)
+            reasons.append(
+                f"sharded cost model: per-device edge block "
+                f"m/C ≈ {state.m // max(C, 1)} drives the estimate")
+        else:
+            reasons.append(
+                f"mesh {mesh} from EnginePlan and shard_batch=True: "
+                f"batch axis {R}-way on 'data' (vertex axis whole; "
+                f"per-device push_batch, bit-identical)")
     elif state.mesh_shape is not None and cfg.batch_method != "ita":
         reasons.append("engine holds a mesh but only ITA batches run "
                        "sharded; power batch falls back to single device")

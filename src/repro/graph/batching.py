@@ -1,7 +1,6 @@
 """Builders turning Graphs / samples into the GraphBatch consumed by GNNs."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np

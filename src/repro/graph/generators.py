@@ -63,7 +63,6 @@ def web_graph(
     rng = np.random.default_rng(seed)
     n_d = int(round(dangling_frac * n))
     perm = rng.permutation(n)
-    dangling = perm[:n_d]
     non_dangling = perm[n_d:]
 
     w_out = _powerlaw_weights(non_dangling.size, gamma_out, rng)

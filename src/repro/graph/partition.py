@@ -149,7 +149,10 @@ def partition_cols(g: Graph, C: int, *, pad_factor: float = 1.05) -> Partition2D
     falls in vertex block [j·nc, (j+1)·nc); dst indices stay global
     (nr == n_pad) and the layout permutation is the identity, so [B, n]
     state needs no reordering on entry or exit.  See core/distributed.py
-    ``ita_batch_distributed`` for the consuming schedule.
+    ``ita_batch_distributed`` for the consuming schedule; this COO form
+    feeds its dense realisation, while the same column geometry re-bucketed
+    per block (``Graph.ell_partitioned(C)`` / ``sparse.ell.ELLCols``)
+    feeds the sharded-ELL kernel realisation.
     """
     part = partition_2d(g, 1, C, pad_factor=pad_factor)
     assert np.array_equal(part.perm, np.arange(part.n_pad)), \

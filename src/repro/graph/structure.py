@@ -22,8 +22,6 @@ Design notes (TPU adaptation, see DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +106,30 @@ class Graph:
         if key not in cache:
             from ..sparse.ell import ell_from_graph
             cache[key] = ell_from_graph(self, widths=key[0], row_align=row_align)
+        return cache[key]
+
+    def ell_partitioned(self, C: int, *, widths: tuple = (8, 32, 128),
+                        row_align: int = 8):
+        """C-way column-partitioned ELL view (``repro.sparse.ELLCols``),
+        cached per (C, widths, row_align).
+
+        The vertex-sharded serving layout: block j holds the ELL bucketing
+        of the edges whose *source* lies in vertex block [j·nc, (j+1)·nc)
+        — the ``partition_cols`` geometry — stacked into [C, ...] arrays
+        so a mesh "model" axis shards them with uniform per-device shapes.
+        Same caching contract as :meth:`ell`: host-side O(m) conversion
+        paid once, cache invisible to the pytree, and a fresh cache pinned
+        by :func:`apply_edge_delta` so a delta never serves stale blocks.
+        """
+        key = (int(C), tuple(sorted(widths)), int(row_align))
+        cache = getattr(self, "_ell_part_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_ell_part_cache", cache)
+        if key not in cache:
+            from ..sparse.ell import ell_cols_from_graph
+            cache[key] = ell_cols_from_graph(self, key[0], widths=key[1],
+                                             row_align=row_align)
         return cache[key]
 
 
@@ -195,11 +217,15 @@ def apply_edge_delta(g: Graph, add=(), remove=()) -> Graph:
         key = np.concatenate([key, akey])
     g_new = graph_from_edges((key % g.n), (key // g.n), g.n)
     # Defensive pin, not a fix: graph_from_edges already returns a fresh
-    # Graph with no cache, so nothing can inherit the OLD edge set's ELL
-    # buckets today.  Pinning an empty cache here makes that invariant
-    # explicit and survivable if Graph construction ever starts copying
-    # cached layouts (tests/test_query_plan.py::TestDeltaEllCache).
+    # Graph with no caches, so nothing can inherit the OLD edge set's ELL
+    # buckets (full-graph or column-partitioned) today.  Pinning empty
+    # caches here makes that invariant explicit and survivable if Graph
+    # construction ever starts copying cached layouts
+    # (tests/test_query_plan.py::TestDeltaEllCache,
+    # tests/test_ell_sharded.py::test_delta_pins_fresh_partition_cache).
     object.__setattr__(g_new, "_ell_cache", {})
+    object.__setattr__(g_new, "_ell_part_cache", {})
+    object.__setattr__(g_new, "_part_cols_cache", {})
     return g_new
 
 

@@ -1,6 +1,8 @@
 from .kernel import spmv_ell_bucket, spmv_ell_bucket_batch
-from .ops import ita_step_ell, spmv_ell, spmv_ell_batch
+from .ops import (ita_step_ell, spmv_ell, spmv_ell_batch,
+                  spmv_ell_cols_local_batch)
 from .ref import spmv_ell_bucket_ref, spmv_ell_ref
 
 __all__ = ["ita_step_ell", "spmv_ell", "spmv_ell_batch", "spmv_ell_bucket",
-           "spmv_ell_bucket_batch", "spmv_ell_bucket_ref", "spmv_ell_ref"]
+           "spmv_ell_bucket_batch", "spmv_ell_bucket_ref",
+           "spmv_ell_cols_local_batch", "spmv_ell_ref"]

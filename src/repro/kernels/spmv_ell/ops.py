@@ -12,11 +12,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ...graph.structure import Graph
 from ...sparse.ell import ELLGraph
 from .kernel import spmv_ell_bucket, spmv_ell_bucket_batch
 
-__all__ = ["spmv_ell", "spmv_ell_batch", "ita_step_ell"]
+__all__ = ["spmv_ell", "spmv_ell_batch", "spmv_ell_cols_local_batch",
+           "ita_step_ell"]
 
 
 def _interpret_default() -> bool:
@@ -65,6 +65,38 @@ def spmv_ell_batch(ell: ELLGraph, W: jnp.ndarray, *, block_rows: int = 256,
                                   indices_are_sorted=True).T
         y = y.at[:, : ell.n].add(ovf)
     return y[:, : ell.n]
+
+
+def spmv_ell_cols_local_batch(Wp, buckets, ovf_src, ovf_dst, n_pad: int, *,
+                              block_rows: int = 256,
+                              interpret: bool | None = None) -> jnp.ndarray:
+    """One device's column-block batched push (the vertex-sharded layout).
+
+    ``Wp`` is the block-local operand batch [B, nc + 1] (sentinel zero
+    column last); ``buckets`` an iterable of ``(row_ids [rows_b],
+    src_idx [rows_b, k_b])`` pairs from one ``ELLCols`` block; ``ovf_src``
+    / ``ovf_dst`` the block's overflow COO (``None`` when the layout has
+    no overflow).  Returns the [B, n_pad] *partial* dst sums this block
+    contributes — the caller (``core/distributed.py``) reduces partials
+    across blocks with ``psum_scatter`` over the mesh "model" axis.
+
+    Not jitted here: it is always called inside an already-traced
+    ``shard_map``/``while_loop`` body, and the inner
+    ``spmv_ell_bucket_batch`` pallas_call carries its own jit.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    B = Wp.shape[0]
+    y = jnp.zeros((B, n_pad + 1), Wp.dtype)
+    for row_ids, src_idx in buckets:
+        rows_sum = spmv_ell_bucket_batch(Wp, src_idx, block_rows=block_rows,
+                                         interpret=interpret)
+        y = y.at[:, row_ids].add(rows_sum)
+    if ovf_src is not None and ovf_src.shape[0]:
+        y = y + jax.ops.segment_sum(Wp[:, ovf_src].T, ovf_dst,
+                                    num_segments=n_pad + 1,
+                                    indices_are_sorted=True).T
+    return y[:, :n_pad]
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ...sparse.ell import ELLGraph, spmv_ell_ref  # re-export full-graph oracle
+from ...sparse.ell import spmv_ell_ref
 
 __all__ = ["spmv_ell_bucket_ref", "spmv_ell_ref"]
 

@@ -22,10 +22,9 @@ import traceback
 
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
              save_hlo: bool = False) -> dict:
-    import jax
 
     from ..configs import get_arch
-    from ..roofline.analysis import analyze_compiled, collective_bytes_from_hlo
+    from ..roofline.analysis import analyze_compiled
     from .mesh import make_production_mesh
     from .steps import build_job
 
@@ -98,7 +97,7 @@ def _model_flops(arch: str, shape: str, cell) -> float | None:
     from ..configs import get_arch
     spec = get_arch(arch)
     if spec.family == "lm":
-        from ..models.lm import active_lm_params, count_lm_params
+        from ..models.lm import active_lm_params
         cfg = spec.make_config()
         n_active = active_lm_params(cfg)
         tokens = cell.meta["global_batch"] * cell.meta["seq_len"]

@@ -18,7 +18,6 @@ Logical-axis conventions (DESIGN.md §5):
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P

@@ -11,11 +11,9 @@ examples call this entry point.
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_arch, get_config
 from ..models.gnn import GNN_REGISTRY

@@ -20,14 +20,12 @@ generalisation of the paper's ITA push (DESIGN.md §4), sharing
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ...launch.sharding import constrain
 from ...sparse.segment_ops import segment_mean, segment_sum
-from ..layers import cross_entropy_loss, layernorm, layernorm_init, mlp, mlp_init
+from ..layers import cross_entropy_loss
 
 __all__ = ["GraphBatch", "gather_scatter", "make_node_cls_loss", "GNN_REGISTRY",
            "register_gnn"]

@@ -32,8 +32,6 @@ makes the 2-D ITA reassembly work, so nothing is computed redundantly.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +54,6 @@ def gc2d_forward_local(params, cfg: GraphCastConfig, geom: dict,
                        src_loc, dst_loc, row_axis="data", col_axis="model"):
     """Per-device body (runs under shard_map).  Shapes are LOCAL."""
     nr, nc, sub = geom["nr"], geom["nc"], geom["sub"]
-    d = cfg.d_hidden
 
     # ---- encoders ----------------------------------------------------
     # node encoder on this column's sub-chunks only (no redundancy), then

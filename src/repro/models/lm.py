@@ -35,16 +35,14 @@ import jax.numpy as jnp
 from ..launch.sharding import constrain, current_rules
 from .layers import (
     apply_rope,
-    cross_entropy_loss,
     dense,
-    dense_init,
     ffn_apply,
     ffn_init,
     rmsnorm,
     rmsnorm_init,
     rope_freqs,
 )
-from .moe import MoEConfig, moe_apply, moe_apply_sharded, moe_init
+from .moe import MoEConfig, moe_apply, moe_apply_sharded
 
 
 def _moe_dispatch(ffn_params, h2d, cfg: LMConfig):
@@ -304,7 +302,6 @@ def _attn_apply(lp: dict, x: jnp.ndarray, cfg: LMConfig, angles, kv=None, q_offs
                                                (zero, pos, zero, zero))
         v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
                                                (zero, pos, zero, zero))
-        S = k_cache.shape[1]
         # decode: mask = positions <= pos (q_offset == pos)
         o = _decode_attention(q, k_cache, v_cache, pos, cfg)
         o = o.reshape(B, T, Hq * dh)

@@ -17,7 +17,6 @@ Shape cells:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

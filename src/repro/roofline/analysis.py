@@ -16,7 +16,6 @@ recognisable, else reported once and flagged.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 

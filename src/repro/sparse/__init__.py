@@ -1,5 +1,14 @@
 """Sparse substrate: segment ops, embedding bag, bucketed-ELL layout."""
-from .ell import ELLBucket, ELLGraph, ell_from_graph, spmv_ell_ref
+from .ell import (
+    ELLBucket,
+    ELLCols,
+    ELLColsBucket,
+    ELLGraph,
+    ell_cols_from_graph,
+    ell_from_graph,
+    spmv_ell_cols_ref,
+    spmv_ell_ref,
+)
 from .segment_ops import (
     embedding_bag,
     scatter_concat_stats,
@@ -11,7 +20,8 @@ from .segment_ops import (
 )
 
 __all__ = [
-    "ELLBucket", "ELLGraph", "ell_from_graph", "embedding_bag",
+    "ELLBucket", "ELLCols", "ELLColsBucket", "ELLGraph",
+    "ell_cols_from_graph", "ell_from_graph", "embedding_bag",
     "scatter_concat_stats", "segment_max", "segment_mean", "segment_min",
-    "segment_softmax", "segment_sum", "spmv_ell_ref",
+    "segment_softmax", "segment_sum", "spmv_ell_cols_ref", "spmv_ell_ref",
 ]

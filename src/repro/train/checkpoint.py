@@ -20,7 +20,7 @@ import json
 import os
 import pathlib
 import shutil
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

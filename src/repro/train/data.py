@@ -16,7 +16,7 @@ Synthetic token streams use a counter-based PRNG (philox-style via
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

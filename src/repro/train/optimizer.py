@@ -16,7 +16,7 @@ gradient.  1/4 the cross-pod bytes at <1e-3 relative update error
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

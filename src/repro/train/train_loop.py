@@ -14,7 +14,6 @@ metrics)`` plus a data stream with ``batch_at(step)``.  The loop owns:
 from __future__ import annotations
 
 import json
-import pathlib
 import time
 from typing import Callable, Optional
 

@@ -1,0 +1,60 @@
+"""Shared plumbing for the simulated-host-mesh tests.
+
+The distributed suites (tests/test_batch_distributed.py,
+tests/test_ell_sharded.py) run their mesh assertions in a *subprocess*
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the main
+pytest process must keep seeing one real device (see conftest).
+
+CI drives a device-count × mesh-shape matrix through two env vars
+instead of a single hard-coded 8-device smoke:
+
+  * ``REPRO_TEST_DEVICE_COUNT`` — simulated devices for the subprocess
+    (default 8);
+  * ``REPRO_TEST_MESH`` — the "R,C" grid the matrix-parametrized tests
+    exercise (default "4,2").
+
+Tests that need a specific geometry guard themselves with
+:func:`needs_devices`, so the same files pass on every matrix cell.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+DEVICES = int(os.environ.get("REPRO_TEST_DEVICE_COUNT", "8"))
+
+MESH = tuple(int(x) for x in
+             os.environ.get("REPRO_TEST_MESH", "4,2").split(","))
+if len(MESH) == 1:
+    MESH = (MESH[0], 1)
+
+ENV = {**os.environ,
+       "XLA_FLAGS": f"--xla_force_host_platform_device_count={DEVICES}",
+       "PYTHONPATH": "src",
+       "JAX_PLATFORMS": "cpu"}
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def needs_devices(k: int):
+    """Skip marker for tests whose grid needs more simulated devices than
+    the matrix cell provides."""
+    return pytest.mark.skipif(
+        DEVICES < k,
+        reason=f"needs >= {k} simulated devices "
+               f"(REPRO_TEST_DEVICE_COUNT={DEVICES})")
+
+
+def run_py(body: str) -> dict:
+    """Run a python snippet on the simulated mesh, parse last json line."""
+    script = textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], env=ENV,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=_REPO_ROOT)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])

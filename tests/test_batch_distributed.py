@@ -5,62 +5,47 @@ Two tiers of coverage:
   * in-process tests on a (1, 1) mesh (the real single CPU device) for the
     machinery that must not need fake devices: config validation, engine
     error contracts, ``one_hot_personalizations`` edge cases;
-  * subprocess tests on an 8-device simulated host mesh (the
-    test_distributed.py pattern — the main pytest process must keep seeing
-    one device, see conftest) asserting the acceptance bar: batch-parallel
-    sharding is BIT-IDENTICAL to ``ita_batch`` per backend and to the
-    unsharded engine, and the vertex-sharded (R, C) schedule agrees to
-    solver tolerance.
-"""
-import json
-import os
-import subprocess
-import sys
-import textwrap
+  * subprocess tests on a simulated host mesh (the test_distributed.py
+    pattern — the main pytest process must keep seeing one device, see
+    conftest) asserting the acceptance bar: batch-parallel sharding is
+    BIT-IDENTICAL to ``ita_batch`` per backend and to the unsharded
+    engine, and the vertex-sharded (R, C) schedule agrees to solver
+    tolerance.
 
+The subprocess device count and the matrix grid come from
+``REPRO_TEST_DEVICE_COUNT`` / ``REPRO_TEST_MESH`` (tests/_mesh_env.py) —
+CI sweeps {2, 8} devices × {(2,1), (8,1), (4,2), (2,4)} grids.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _mesh_env import DEVICES, MESH, needs_devices, run_py
 from repro.core import BatchConfig, EnginePlan, PageRankEngine
 from repro.core.batch import ita_batch, one_hot_personalizations
 from repro.core.distributed import ita_batch_distributed, resolve_mesh
 from repro.graph import web_graph
 
-ENV = {**os.environ,
-       "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-       "PYTHONPATH": "src",
-       "JAX_PLATFORMS": "cpu"}
-
-
-def run_py(body: str) -> dict:
-    """Run a python snippet in a fresh 8-device process, parse last json line."""
-    script = textwrap.dedent(body)
-    r = subprocess.run([sys.executable, "-c", script], env=ENV,
-                       capture_output=True, text=True, timeout=600,
-                       cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    if r.returncode != 0:
-        raise AssertionError(f"subprocess failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}")
-    return json.loads(r.stdout.strip().splitlines()[-1])
-
 
 # ---------------------------------------------------------------------------
-# 8-device host mesh (subprocess)
+# simulated host mesh (subprocess)
 # ---------------------------------------------------------------------------
 def test_engine_mesh_solve_batch_bit_identical():
     """The acceptance bar: EnginePlan(mesh=...) serving == unsharded engine,
-    bitwise, including topk answers."""
+    bitwise, including topk answers — on the (n_dev, 1) grid of whatever
+    the matrix cell provides."""
     out = run_py("""
         import jax, json
         jax.config.update("jax_enable_x64", True)
         import jax.numpy as jnp
         from repro.graph import web_graph
         from repro.core import PageRankEngine, EnginePlan, one_hot_personalizations
+        R = %d
         g = web_graph(600, 4200, dangling_frac=0.2, seed=5)
         P = one_hot_personalizations(g, [1, 7, 42, 99, 7, 311])
         e0 = PageRankEngine(g, EnginePlan(step_impl="dense"))
-        e1 = PageRankEngine(g, EnginePlan(step_impl="dense", mesh=(8, 1)))
+        e1 = PageRankEngine(g, EnginePlan(step_impl="dense", mesh=(R, 1)))
         r0, r1 = e0.solve_batch(P), e1.solve_batch(P)
         t0, t1 = e0.topk([1, 7, 42], k=5), e1.topk([1, 7, 42], k=5)
         print(json.dumps({
@@ -69,13 +54,53 @@ def test_engine_mesh_solve_batch_bit_identical():
             "topk_equal": bool(jnp.array_equal(t0.indices, t1.indices))
                           and bool(jnp.array_equal(t0.scores, t1.scores)),
             "mesh": e1.describe()["mesh"], "method": r1.method}))
-    """)
+    """ % DEVICES)
     assert out["pi_equal"], out
     assert out["topk_equal"], out
     assert out["iters"][0] == out["iters"][1], out
-    assert out["mesh"] == [8, 1], out
+    assert out["mesh"] == [DEVICES, 1], out
 
 
+def test_mesh_matrix_env_grid():
+    """The matrix cell's own grid (REPRO_TEST_MESH): both vertex-sharded
+    schedules (dense and sharded-ELL) agree with the single-device batch —
+    bitwise per backend when C == 1, to solver tolerance when C > 1."""
+    R, C = MESH
+    if R * C > DEVICES:
+        pytest.skip(f"grid {MESH} needs {R * C} devices, have {DEVICES}")
+    out = run_py("""
+        import jax, json
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+        from repro.graph import web_graph
+        from repro.core.batch import ita_batch, one_hot_personalizations
+        from repro.core.distributed import ita_batch_distributed, resolve_mesh
+        R, C = %d, %d
+        g = web_graph(700, 5200, dangling_frac=0.15, seed=6)
+        P = one_hot_personalizations(g, [0, 13, 256, 257, 699])
+        mesh = resolve_mesh((R, C))
+        out = {}
+        for impl in ("dense", "ell"):
+            ref = ita_batch(g, P, xi=1e-12, step_impl=impl)
+            r = ita_batch_distributed(g, P, mesh, xi=1e-12, step_impl=impl)
+            out[impl] = {
+                "err": float(jnp.max(jnp.abs(ref.pi - r.pi))),
+                "equal": bool(jnp.array_equal(ref.pi, r.pi)),
+                "iters": [ref.iterations, r.iterations],
+                "method": r.method}
+        print(json.dumps(out))
+    """ % MESH)
+    for impl in ("dense", "ell"):
+        r = out[impl]
+        assert r["iters"][0] == r["iters"][1], (impl, out)
+        assert r["method"] == f"ita_batch_dist[{impl}|{R}x{C}]", (impl, out)
+        if C == 1:
+            assert r["equal"], (impl, out)   # batch-parallel: bitwise
+        else:
+            assert r["err"] < 1e-10, (impl, out)
+
+
+@needs_devices(8)
 def test_ita_batch_distributed_2d_matches_single_device():
     """(4, 2) grid — vertex axis sharded over "model": the cross-column
     psum_scatter regroups float sums, so tolerance not bitwise."""
@@ -111,14 +136,15 @@ def test_ita_batch_distributed_ell_bitwise():
         g = web_graph(400, 2600, dangling_frac=0.2, seed=2)
         P = one_hot_personalizations(g, [3, 50, 399])
         ref = ita_batch(g, P, xi=1e-10, step_impl="ell")
-        r = ita_batch_distributed(g, P, resolve_mesh((8, 1)), xi=1e-10,
+        r = ita_batch_distributed(g, P, resolve_mesh((%d, 1)), xi=1e-10,
                                   step_impl="ell")
         print(json.dumps({"equal": bool(jnp.array_equal(ref.pi, r.pi)),
                           "method": r.method}))
-    """)
+    """ % DEVICES)
     assert out["equal"], out
 
 
+@needs_devices(8)
 @pytest.mark.slow
 def test_engine_mesh_2d_and_update_lifecycle():
     """A vertex-sharded engine serves within tolerance and survives an
@@ -159,6 +185,13 @@ def test_trivial_mesh_bit_identical_in_process(small_graph):
     r = ita_batch_distributed(g, P, resolve_mesh((1, 1)), xi=1e-10)
     assert jnp.array_equal(ref.pi, r.pi)
     assert r.iterations == ref.iterations
+    # "auto"/None resolve on the batch-parallel (C == 1) branch too, not
+    # just on C > 1 grids (regression: used to KeyError)
+    for impl in ("auto", None):
+        r_auto = ita_batch_distributed(g, P, resolve_mesh((1, 1)), xi=1e-10,
+                                       step_impl=impl)
+        assert r_auto.method == "ita_batch_dist[dense|1x1]"  # cpu cost pick
+        assert jnp.array_equal(ref.pi, r_auto.pi)
 
 
 def test_engine_trivial_mesh_and_opt_out(small_graph):

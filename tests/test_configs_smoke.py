@@ -2,14 +2,13 @@
 CPU, output shapes + no NaNs.  Full configs are audited analytically
 (param-count formulas) — they are only ever *compiled* via the dry-run.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.graph import web_graph
 from repro.graph.batching import full_graph_batch, molecule_batch, sampled_graph_batch
 from repro.graph.sampler import NeighborSampler
@@ -21,7 +20,6 @@ from repro.models.lm import (
     init_lm_params,
     lm_decode_step,
     lm_loss,
-    lm_prefill,
 )
 from repro.models.recsys import xdeepfm_init, xdeepfm_loss, xdeepfm_score_candidates
 

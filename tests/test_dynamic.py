@@ -1,7 +1,6 @@
 """Beyond-paper extensions: incremental (dynamic-graph) ITA and
 Gauss-Southwell prioritized push — both must agree with the reference
 solver, and the incremental path must be much cheaper than re-solving."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -5,7 +5,6 @@ from _propcheck import given, settings
 from _propcheck import strategies as st
 
 from repro.graph import (
-    Graph,
     csr_from_graph,
     erdos_renyi,
     graph_from_edges,

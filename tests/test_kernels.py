@@ -10,8 +10,7 @@ import pytest
 from _propcheck import given, settings
 from _propcheck import strategies as st
 
-from repro.core import ita, ita_step
-from repro.core.propagate import spmv_p
+from repro.core import ita_step
 from repro.graph import web_graph
 from repro.kernels.flash_attention import (
     decode_ref,

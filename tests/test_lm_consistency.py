@@ -9,7 +9,6 @@ import pytest
 
 from repro.configs import get_config
 from repro.models.lm import (
-    LMConfig,
     init_kv_cache,
     init_lm_params,
     lm_decode_step,

@@ -177,7 +177,11 @@ class TestPlannerDecisions:
         caps_f = get_step_impl("frontier").capabilities()
         assert not caps_f.jittable
         assert not caps_f.batch_parallel_mesh and not caps_f.donation
-        assert get_step_impl("ell").capabilities().jittable
+        caps_e = get_step_impl("ell").capabilities()
+        assert caps_e.jittable
+        # since the column-sharded ELL schedule landed, every jittable
+        # backend serves every mesh shape
+        assert caps_e.vertex_sharded_mesh
 
     def test_inconsistent_capability_declaration_rejected(self):
         from repro.core import BackendCapabilities
@@ -320,19 +324,22 @@ def test_run_query_mesh8_plan_and_bitwise_parity():
         t1 = e1.run(TopKQuery(sources=[1, 7, 42], k=5)).result
         t0 = e0.topk([1, 7, 42], k=5)
         text = ep.explain()
-        # C>1 capability gate: 'auto' resolves (-> dense on CPU, accepted),
-        # 'ell' is rejected with the ValueError, never a KeyError
+        # C>1 capability gate: 'auto' resolves among declared
+        # vertex-sharded backends (-> the sharded-ELL schedule) and
+        # 'frontier' is rejected with the ValueError, never a KeyError
         from repro.core.distributed import ita_batch_distributed, resolve_mesh
         mesh2d = resolve_mesh((4, 2))
         try:
-            ita_batch_distributed(g, P[:2], mesh2d, xi=1e-8, step_impl="ell")
-            ell_rejected = False
+            ita_batch_distributed(g, P[:2], mesh2d, xi=1e-8,
+                                  step_impl="frontier")
+            frontier_rejected = False
         except ValueError as e:
-            ell_rejected = "dense segment-sum" in str(e)
-        auto_ok = ita_batch_distributed(
-            g, P[:2], mesh2d, xi=1e-6, step_impl="auto").converged
+            frontier_rejected = "vertex_sharded_mesh" in str(e)
+        r_auto = ita_batch_distributed(g, P[:2], mesh2d, xi=1e-6,
+                                       step_impl="auto")
+        auto_ok = r_auto.converged and "ell" in r_auto.method
         print(json.dumps({
-            "ell_rejected": ell_rejected, "auto_ok": bool(auto_ok),
+            "frontier_rejected": frontier_rejected, "auto_ok": bool(auto_ok),
             "path": ep.path, "mesh": list(ep.mesh),
             "pi_equal": bool(jnp.array_equal(r0.pi, env.result.pi)),
             "iters": [r0.iterations, env.iterations],
@@ -347,7 +354,7 @@ def test_run_query_mesh8_plan_and_bitwise_parity():
     assert out["iters"][0] == out["iters"][1], out
     assert out["explains_backend"] and out["explains_mesh"], out
     assert out["explains_why"], out
-    assert out["ell_rejected"] and out["auto_ok"], out
+    assert out["frontier_rejected"] and out["auto_ok"], out
 
 
 # --------------------------------------------------------------------------

@@ -3,7 +3,6 @@ slice-aware bytes, collectives) against hand-written HLO snippets, plus an
 end-to-end check on a real compiled module."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline.analysis import analyze_compiled, parse_shape_bytes

@@ -12,7 +12,6 @@ from repro.graph.sampler import NeighborSampler, sampled_shapes
 from repro.sparse import (
     embedding_bag,
     scatter_concat_stats,
-    segment_max,
     segment_mean,
     segment_softmax,
     segment_sum,
@@ -152,7 +151,6 @@ class TestPartition:
         g = web_graph(160, 1000, seed=6)
         R, C = 2, 2
         p = partition_2d(g, R, C)
-        ids = np.arange(p.n_pad)
         for i in range(R):
             for j in range(C):
                 mask = p.src_local[i, j] != p.nc

@@ -1,6 +1,5 @@
 """Training substrate: optimizer math, checkpoint atomicity + kill/restart,
 data determinism, gradient compression error-feedback."""
-import json
 import os
 import subprocess
 import sys
