@@ -24,6 +24,7 @@ from .batch import (
     one_hot_personalizations,
     power_method_batch,
 )
+from .cache import CachePolicy, ResultCache
 from .dynamic import ita_incremental, ita_prioritized, ita_residual_state
 from .engine import EnginePlan, PageRankEngine, TopKResult
 from .forward_push import forward_push
@@ -53,9 +54,10 @@ from .solver_config import (
 
 __all__ = [
     "BackendCapabilities", "BatchConfig", "BatchQuery", "BatchSolverResult",
-    "DeltaQuery", "EnginePlan", "ExecutionPlan", "ForwardPushConfig",
-    "ItaConfig", "MonteCarloConfig", "PPRQuery", "PageRankEngine",
-    "PowerConfig", "Query", "RankQuery", "ResultEnvelope", "SOLVERS",
+    "CachePolicy", "DeltaQuery", "EnginePlan", "ExecutionPlan",
+    "ForwardPushConfig", "ItaConfig", "MonteCarloConfig", "PPRQuery",
+    "PageRankEngine", "PowerConfig", "Query", "RankQuery", "ResultCache",
+    "ResultEnvelope", "SOLVERS",
     "STEP_IMPLS", "Solver", "SolverBackend", "SolverConfig", "SolverResult",
     "StepBackend", "TopKQuery", "TopKResult", "available_step_impls",
     "choose_backend", "dangling_mass", "err_max_rel", "forward_push",

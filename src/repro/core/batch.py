@@ -124,6 +124,7 @@ def ita_batch(
     dtype=jnp.float64,
     step_impl: str = "dense",
     ctx=None,
+    return_state: bool = False,
 ) -> BatchSolverResult:
     """Multi-source ITA: ``p_batch`` is [B, n], one preference row per query.
 
@@ -136,6 +137,14 @@ def ita_batch(
     ``None`` prepares one in place.  Returns a :class:`BatchSolverResult`
     with ``pi`` ``dtype``[B, n]; for the mesh-sharded form of this solve
     see ``core/distributed.ita_batch_distributed``.
+
+    ``return_state=True`` returns ``(result, (PiBar, H))`` — the
+    UNNORMALIZED per-row residual pairs at quiescence, the batched
+    analogue of :func:`repro.core.dynamic.ita_residual_state`.  ``pi``
+    is unchanged (the fold ``PiBar + H`` then row-normalize happens
+    either way); the pair is what the result cache stores so a cached
+    row can later be *revalidated* by ``ita_incremental`` instead of
+    re-solved after an edge delta.
     """
     backend = get_step_impl(step_impl)
     if ctx is None:
@@ -156,13 +165,16 @@ def ita_batch(
             it += 1
             if int(n_active) == 0:
                 break
-    PiBar = PiBar + H
-    Pi = PiBar / jnp.sum(PiBar, axis=1, keepdims=True)
+    U = PiBar + H
+    Pi = U / jnp.sum(U, axis=1, keepdims=True)
     Pi = jax.block_until_ready(Pi)
-    return BatchSolverResult(
+    result = BatchSolverResult(
         pi=Pi, iterations=int(it), residual=float(xi),
         converged=bool(int(n_active) == 0), method=f"ita_batch[{step_impl}]",
         batch=int(p_batch.shape[0]), wall_time_s=time.perf_counter() - t0)
+    if return_state:
+        return result, (PiBar, H)
+    return result
 
 
 @partial(jax.jit, static_argnames=("max_iter", "backend"))

@@ -1,0 +1,389 @@
+"""Cache-aside PPR result cache with delta-driven revalidation.
+
+The serving driver's Zipf-skewed seed stream means a small hot set of
+seeds dominates traffic, yet every request re-runs a full batched push.
+This module puts a cache-aside layer over ``engine.run(PPRQuery /
+TopKQuery)``: entries are keyed on ``(graph_version, seed, frozen cfg)``,
+carry materialized top-k views for hot seeds, and — the part that makes
+the cache survive dynamic graphs — are *revalidated* instead of discarded
+when the edge set changes.
+
+Revalidation reuses the paper's constructive (π̄, h) decomposition
+(PAPER §VII, ``core/dynamic.py``): alongside each cached ``pi`` row the
+cache stores the row's UNNORMALIZED residual pair at quiescence, which is
+exactly the warm-start state ``ita_incremental`` consumes.  After
+``apply_edge_delta`` bumps the graph version, a stale entry is refreshed
+by one signed correction cascade from its stored pair — cost proportional
+to the delta's reach, not a from-scratch solve — and the refreshed value
+matches a fresh solve within the solver tolerance ξ of its config (the
+cache's *staleness bound*, reported by the planner).  D-Iteration's
+diffusion bookkeeping (1501.06350) and the authors' forward-push
+follow-up (2302.03245) exploit the same "keep the residual, not just the
+answer" structure.
+
+Correctness contract (tests/test_cache.py):
+
+  * a **hit** returns bit-identical values to what the uncached
+    ``engine.run`` would produce — rows of the batched ITA loop are
+    batch-composition invariant (a quiet row pushes nothing), so a row
+    solved in the fill micro-batch equals the row any other batch would
+    produce, and ``lax.top_k`` is deterministic per row;
+  * a **stale** entry (version mismatch) is never served: it is either
+    revalidated (``CachePolicy.revalidate``) or dropped and re-solved;
+  * misses fall through to the engine's own planned path (donated /
+    distributed / plain batched loop), so filling works identically on
+    single-device and (R, C) mesh engines.
+
+Wiring: ``EnginePlan(cache=CachePolicy(...))`` (or ``cache=True``)
+attaches a :class:`ResultCache` to the engine; per-query counters ride in
+``ResultEnvelope.cache_stats`` and cumulative ones in
+:meth:`ResultCache.stats`.  ``PPRQuery/TopKQuery(no_cache=True)``
+bypasses per query.  See docs/API.md §"Result cache".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .query import PPRQuery, ResultEnvelope, TopKQuery
+from .solver_config import BatchConfig
+
+__all__ = ["CachePolicy", "CacheEntry", "ResultCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    """Static description of a result cache.
+
+    ``capacity`` bounds the entry count (LRU eviction).  ``revalidate``
+    selects what happens to a stale entry: ``True`` refreshes it with one
+    incremental cascade from its stored (π̄, h) pair, ``False`` drops it
+    and re-solves from scratch (classic full invalidation).
+    ``max_views`` caps the materialized top-k views kept per entry —
+    views are memoized per ``k`` so hot seeds answer repeat ``TopKQuery``
+    shapes without re-ranking.
+    """
+
+    capacity: int = 4096
+    revalidate: bool = True
+    max_views: int = 4
+
+    def __post_init__(self):
+        if int(self.capacity) < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if int(self.max_views) < 1:
+            raise ValueError(f"max_views must be >= 1, got {self.max_views}")
+
+
+class CacheEntry:
+    """One cached seed: normalized row, residual state, top-k views."""
+
+    __slots__ = (
+        "seed",
+        "version",
+        "pi",
+        "pi_bar",
+        "h",
+        "converged",
+        "iterations",
+        "method",
+        "views",
+    )
+
+    def __init__(self, seed, version, pi, pi_bar, h, converged, iterations, method):
+        self.seed = int(seed)
+        self.version = int(version)
+        self.pi = pi  # normalized [n] row — the serving payload
+        self.pi_bar = pi_bar  # unnormalized π̄ row at quiescence
+        self.h = h  # sub-ξ residual leftovers (signed)
+        self.converged = bool(converged)
+        self.iterations = int(iterations)
+        self.method = str(method)
+        self.views = {}  # k -> (indices [k], scores [k]), insertion-ordered
+
+
+def _one_hot_seeds(p_batch) -> Optional[np.ndarray]:
+    """Seed vector when every row of ``p_batch`` is an exact one-hot.
+
+    Returns int64[B] seeds, or ``None`` when any row is not a single
+    exact 1.0 (dense personalizations are not seed-cacheable).
+    """
+    P = np.asarray(p_batch)
+    if P.ndim != 2 or P.shape[0] == 0:
+        return None
+    nonzero = P != 0.0
+    if not np.all(nonzero.sum(axis=1) == 1):
+        return None
+    cols = np.argmax(nonzero, axis=1)
+    if not np.all(P[np.arange(P.shape[0]), cols] == 1.0):
+        return None
+    return cols.astype(np.int64)
+
+
+class ResultCache:
+    """Cache-aside layer over ``engine.run(PPRQuery/TopKQuery)``.
+
+    Owned by a :class:`~repro.core.engine.PageRankEngine` (one cache per
+    prepared session — entries embed that engine's backend numerics).
+    ``serve`` returns a full :class:`ResultEnvelope` or ``None`` when the
+    query is not cacheable (non-ITA batch family, dense personalization
+    rows, empty batch, explicit ``no_cache``) — the engine then runs the
+    query exactly as if no cache existed.
+    """
+
+    def __init__(self, policy: Optional[CachePolicy] = None):
+        self.policy = policy or CachePolicy()
+        self._entries: OrderedDict = OrderedDict()
+        # cumulative row-level counters (one request row = one count)
+        self.hits = 0
+        self.misses = 0
+        self.revalidated = 0
+        self.bypassed = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------ #
+    # bookkeeping
+    # ------------------------------------------------------------------ #
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def hit_rate(self) -> float:
+        looked = self.hits + self.misses + self.revalidated
+        return self.hits / looked if looked else 0.0
+
+    def stats(self) -> dict:
+        """Cumulative counters (serving reports, benchmarks)."""
+        return dict(
+            hits=self.hits,
+            misses=self.misses,
+            revalidated=self.revalidated,
+            bypassed=self.bypassed,
+            evictions=self.evictions,
+            entries=len(self._entries),
+            hit_rate=self.hit_rate(),
+        )
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def _get(self, key) -> Optional[CacheEntry]:
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+        return entry
+
+    def _put(self, key, entry: CacheEntry) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > int(self.policy.capacity):
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    # ------------------------------------------------------------------ #
+    # the cache-aside path
+    # ------------------------------------------------------------------ #
+    def serve(self, engine, query) -> Optional[ResultEnvelope]:
+        """Answer ``query`` from the cache, filling misses through the
+        engine's own planned path; ``None`` means "not cacheable"."""
+        cfg = query.cfg or BatchConfig(dtype=engine.engine_plan.dtype)
+        if not isinstance(cfg, BatchConfig) or cfg.batch_method != "ita":
+            # power batches carry no (π̄, h) residual state to revalidate
+            # from; let the planner run (and raise on bad cfg types).
+            self.bypassed += 1
+            return None
+        if isinstance(query, TopKQuery):
+            sources = np.asarray(query.sources)
+            if sources.ndim != 1 or sources.size == 0 or int(query.k) < 1:
+                return None  # planner owns the shape errors
+            seeds, k = sources.astype(np.int64), int(query.k)
+        else:
+            seeds, k = _one_hot_seeds(query.p_batch), None
+            if seeds is None:
+                self.bypassed += 1
+                return None
+        if seeds.size and (seeds.min() < 0 or seeds.max() >= engine.graph.n):
+            return None  # out-of-range seeds: keep the uncached semantics
+        # plan first: identical plan-time validation errors to the
+        # uncached path, and the plan (with its cache/staleness reasons)
+        # is the provenance the envelope carries.
+        ep = engine.plan(query)
+        t0 = time.perf_counter()
+        version = engine.graph_version
+        ckey = cfg.static_key()
+        resolved: dict = {}
+        miss_seeds: list = []
+        revalidated_seeds = set()
+        reval_iters = 0
+        for s in dict.fromkeys(seeds.tolist()):  # unique, order-stable
+            entry = self._get((s, ckey))
+            if entry is not None and entry.version == version:
+                resolved[s] = entry
+            elif entry is not None and self.policy.revalidate:
+                it = self._revalidate(engine, entry, cfg, version)
+                reval_iters = max(reval_iters, it)
+                resolved[s] = entry
+                revalidated_seeds.add(s)
+            else:
+                if entry is not None:  # stale and not revalidating: drop
+                    self._entries.pop((s, ckey), None)
+                miss_seeds.append(s)
+        fill = None
+        if miss_seeds:
+            fill = self._fill(engine, query, cfg, miss_seeds, k, version, ckey)
+            for s in miss_seeds:
+                resolved[s] = self._entries[(s, ckey)]
+        # row-level counters: each request row is classified by how its
+        # seed was resolved THIS call (duplicates of a miss seed count as
+        # misses — they arrived in the same micro-batch).
+        miss_set = set(miss_seeds)
+        n_miss = sum(1 for s in seeds.tolist() if s in miss_set)
+        n_reval = sum(1 for s in seeds.tolist() if s in revalidated_seeds)
+        n_hit = int(seeds.size) - n_miss - n_reval
+        self.hits += n_hit
+        self.misses += n_miss
+        self.revalidated += n_reval
+        res, values = self._assemble(resolved, seeds, k, cfg, fill, reval_iters)
+        counters = res.result if k is not None else res
+        return ResultEnvelope(
+            result=res,
+            plan=ep,
+            values=values,
+            iterations=int(counters.iterations),
+            residual=float(cfg.xi),
+            converged=bool(counters.converged),
+            wall_time_s=time.perf_counter() - t0,
+            cache_stats=dict(
+                hits=n_hit,
+                misses=n_miss,
+                revalidated=n_reval,
+                graph_version=version,
+                total_hits=self.hits,
+                total_misses=self.misses,
+                total_revalidated=self.revalidated,
+                total_hit_rate=self.hit_rate(),
+                entries=len(self._entries),
+                evictions=self.evictions,
+            ),
+        )
+
+    # ------------------------------------------------------------------ #
+    # miss fill — the engine's own planned path, with state capture
+    # ------------------------------------------------------------------ #
+    def _fill(self, engine, query, cfg, miss_seeds, k, version, ckey):
+        """Solve the miss seeds in one micro-batch along the plan the
+        uncached query would take, storing (pi, π̄, h) per row."""
+        from .batch import one_hot_personalizations
+
+        if isinstance(query, TopKQuery):
+            fill_query = dataclasses.replace(query, sources=tuple(miss_seeds), no_cache=True)
+        else:
+            fill_query = dataclasses.replace(
+                query,
+                p_batch=one_hot_personalizations(engine.graph, miss_seeds, dtype=cfg.dtype),
+                no_cache=True,
+            )
+        fill_ep = engine.plan(fill_query)
+        dtype = engine.engine_plan.dtype if isinstance(query, TopKQuery) else cfg.dtype
+        P = one_hot_personalizations(engine.graph, miss_seeds, dtype=dtype)
+        rb, (PiBar, H) = engine._exec_ppr(P, fill_ep, return_state=True)
+        view = None
+        if k is not None:
+            scores, indices = jax.lax.top_k(rb.pi, k)
+            view = (indices, scores)
+        for i, s in enumerate(miss_seeds):
+            entry = CacheEntry(
+                seed=s,
+                version=version,
+                pi=rb.pi[i],
+                pi_bar=PiBar[i],
+                h=H[i],
+                converged=rb.converged,
+                iterations=rb.iterations,
+                method=rb.method,
+            )
+            if view is not None:
+                entry.views[k] = (view[0][i], view[1][i])
+            self._put((s, ckey), entry)
+        return rb
+
+    # ------------------------------------------------------------------ #
+    # delta-driven revalidation — the (π̄, h) warm start, not a re-solve
+    # ------------------------------------------------------------------ #
+    def _revalidate(self, engine, entry: CacheEntry, cfg, version) -> int:
+        """Refresh a stale entry against the CURRENT graph with one
+        signed incremental cascade from its stored residual pair.
+
+        Exact across any number of intervening deltas: the warm start is
+        the run invariant h₀ = p + cP'π̄_old − π̄_old evaluated under the
+        current P', so intermediate versions never need replaying.  The
+        refreshed row matches a fresh solve within ~ξ (the staleness
+        bound; tests/test_cache.py pins it).  Returns the cascade's
+        iteration count.
+        """
+        from .batch import one_hot_personalizations
+        from .dynamic import ita_incremental
+
+        p = (
+            one_hot_personalizations(engine.graph, [entry.seed], dtype=entry.pi_bar.dtype)[0]
+            * engine.graph.n
+        )
+        res, (pi_bar, h) = ita_incremental(
+            engine.graph,
+            engine.graph,
+            entry.pi_bar,
+            entry.h,
+            c=cfg.c,
+            xi=cfg.xi,
+            max_iter=cfg.max_iter,
+            step_impl=engine.step_impl,
+            ctx=engine._ctx,
+            return_state=True,
+            p=p,
+        )
+        entry.pi, entry.pi_bar, entry.h = res.pi, pi_bar, h
+        entry.version = int(version)
+        entry.converged = bool(res.converged)
+        entry.iterations = int(res.iterations)
+        entry.views.clear()  # ranks may have shifted; re-materialize lazily
+        return int(res.iterations)
+
+    # ------------------------------------------------------------------ #
+    # assembly — stitch per-seed entries back into the batch answer
+    # ------------------------------------------------------------------ #
+    def _assemble(self, resolved, seeds, k, cfg, fill, reval_iters):
+        from .batch import BatchSolverResult
+        from .engine import TopKResult
+
+        entries = [resolved[s] for s in seeds.tolist()]
+        Pi = jnp.stack([e.pi for e in entries])
+        fill_iters = int(fill.iterations) if fill is not None else 0
+        iterations = max(fill_iters, int(reval_iters))
+        res = BatchSolverResult(
+            pi=Pi,
+            iterations=iterations,
+            residual=float(cfg.xi),
+            converged=all(e.converged for e in entries),
+            method=entries[0].method,
+            batch=int(seeds.size),
+        )
+        if k is None:
+            return res, Pi
+        # materialize missing top-k views for this k in one pass
+        need = [e for e in dict.fromkeys(entries) if k not in e.views]
+        if need:
+            scores, indices = jax.lax.top_k(jnp.stack([e.pi for e in need]), k)
+            for i, e in enumerate(need):
+                while len(e.views) >= int(self.policy.max_views):
+                    e.views.pop(next(iter(e.views)))
+                e.views[k] = (indices[i], scores[i])
+        indices = jnp.stack([e.views[k][0] for e in entries])
+        scores = jnp.stack([e.views[k][1] for e in entries])
+        tk = TopKResult(indices=indices, scores=scores, result=res)
+        return tk, (indices, scores)

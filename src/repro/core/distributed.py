@@ -632,6 +632,7 @@ def ita_batch_distributed(
     col_axis: str = "model",
     ell_widths: tuple = (8, 32, 128),
     row_align: int = 8,
+    return_state: bool = False,
 ) -> BatchSolverResult:
     """Mesh-sharded multi-source ITA: ``p_batch`` is [B, n], one row per query.
 
@@ -659,6 +660,11 @@ def ita_batch_distributed(
 
     B is padded up to a multiple of R with all-zero rows (quiet from step
     0 — they change neither the iteration count nor any real row).
+
+    ``return_state=True`` returns ``(result, (PiBar, H))`` — the
+    unnormalized per-row residual pairs (padding stripped), the same
+    contract as :func:`repro.core.batch.ita_batch`; the result cache
+    stores them for delta-driven revalidation.
     """
     R = mesh.shape[batch_axis]
     C = mesh.shape[col_axis] if col_axis in mesh.axis_names else 1
@@ -734,14 +740,17 @@ def ita_batch_distributed(
         method = f"ita_batch_dist[{impl}|{R}x{C}]"
 
     it = int(it)
-    PiBar = PiBar + H
-    Pi = PiBar[:B, : g.n]
+    U = PiBar + H
+    Pi = U[:B, : g.n]
     Pi = Pi / jnp.sum(Pi, axis=1, keepdims=True)
     Pi = jax.block_until_ready(Pi)
-    return BatchSolverResult(
+    result = BatchSolverResult(
         pi=Pi, iterations=int(it), residual=float(xi),
         converged=bool(int(n_active) == 0), method=method, batch=B,
         wall_time_s=time.perf_counter() - t0)
+    if return_state:
+        return result, (PiBar[:B, : g.n], H[:B, : g.n])
+    return result
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,7 @@ def ita_incremental(
     step_impl: str = "dense",
     ctx=None,
     return_state: bool = False,
+    p=None,
 ) -> SolverResult:
     """Update PageRank after edge insertions/deletions.
 
@@ -82,6 +83,13 @@ def ita_incremental(
     warm-start pair :func:`ita_residual_state` produces, so a session
     (:class:`repro.core.engine.PageRankEngine`) can chain incremental
     updates without ever re-solving from scratch.
+
+    ``p`` is the personalization the warm-start invariant is evaluated
+    against, in the paper's h₀ scale (sum = n; ``None`` means the global
+    ranking's uniform ones-vector).  Personalized entries — e.g. the
+    one-hot PPR rows the result cache (``repro.core.cache``) revalidates —
+    pass ``n · e_seed`` so the refreshed entry solves the same PR(P', c,
+    p) its cached value did.
     """
     dtype = pi_bar_old.dtype
     backend = get_step_impl(step_impl)
@@ -98,7 +106,10 @@ def ita_incremental(
     # across dangling-status changes — the cancelled form c(P'−P)(π̄+h)+h is
     # NOT: a previously-dangling vertex gaining an edge carries O(1) parked
     # mass in h, and (P'−P) hits it at first order (caught by tests).
-    p_vec = jnp.ones((g_new.n,), dtype)  # paper scale: h₀ = n·(e/n) = 1
+    if p is None:
+        p_vec = jnp.ones((g_new.n,), dtype)  # paper scale: h₀ = n·(e/n) = 1
+    else:
+        p_vec = jnp.asarray(p, dtype)
     r = p_vec + push(g_new, pi_bar_old) - pi_bar_old
 
     h, pi_bar, n_active, ops, it = run_ita_loop(
@@ -138,7 +149,13 @@ def _prioritized_loop(g: Graph, ctx, h0, c, xi, k: int, max_iter: int,
         pi_bar = pi_bar + h_act
         pushed = backend.push(g, ctx, h_act * inv_deg * c)
         h = jnp.where(active, 0, h) + pushed
-        n_elig = jnp.sum(eligible, dtype=jnp.int32)
+        # Eligibility is counted AFTER the push: the pre-push count is
+        # nonzero by construction on every round that pushed anything, so
+        # returning it made the loop run one extra zero-mass round (a full
+        # wasted B·m push) after convergence before cond() saw 0
+        # (tests/test_dynamic.py::TestPrioritized::test_no_extra_round).
+        n_elig = jnp.sum(jnp.logical_and(h > xi, non_dangling),
+                         dtype=jnp.int32)
         ops = jnp.sum(jnp.where(active, g.out_deg, 0).astype(jnp.float32),
                       dtype=jnp.float32)
         return h, pi_bar, n_elig, ops_total + ops, it + 1

@@ -63,6 +63,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..graph.structure import Graph, apply_edge_delta
 from .backends import choose_backend, get_step_impl, resolve_step_impl
+from .cache import CachePolicy, ResultCache
 from .batch import (
     BatchSolverResult,
     _ita_batch_loop,
@@ -124,6 +125,11 @@ class EnginePlan:
     c: float = 0.85          # damping used by the update/residual machinery
     update_xi: float = 1e-12  # accuracy the maintained residual state holds
     mesh: Any = None          # None | "host" | (R,) | (R, C) | Mesh
+    # Result cache over PPRQuery/TopKQuery (core/cache.py): None disables,
+    # True attaches the default CachePolicy(), or pass a CachePolicy.
+    # Entries key on (graph_version, seed, frozen cfg); DeltaQuery bumps
+    # the version and stale entries revalidate via ita_incremental.
+    cache: Any = None
 
 
 class TopKResult(NamedTuple):
@@ -145,6 +151,17 @@ class PageRankEngine:
         self._state = None        # (pi_bar, h) residual pair for DeltaQuery
         self._compiled = {}       # static_key -> donated jitted solve
         self._donate = jax.default_backend() != "cpu"
+        policy = self.engine_plan.cache
+        if policy is True:
+            policy = CachePolicy()
+        elif policy is not None and not isinstance(policy, CachePolicy):
+            raise TypeError(
+                f"EnginePlan.cache must be None, True, or a CachePolicy; "
+                f"got {type(policy).__name__}")
+        self.cache_policy = policy
+        # the cache survives _prepare: entries are version-stamped, so a
+        # DeltaQuery leaves them in place to be revalidated lazily.
+        self.result_cache = ResultCache(policy) if policy is not None else None
         self._prepare(graph)
 
     # ------------------------------------------------------------------ #
@@ -155,6 +172,9 @@ class PageRankEngine:
         and (when the plan carries a mesh) lay the prepared state out on
         the device grid once so every query reuses the placement."""
         self.graph = g
+        # the edge-set version cache entries are stamped with; bumped by
+        # apply_edge_delta, so each DeltaQuery advances it through here.
+        self.graph_version = g.graph_version
         plan = self.engine_plan
         # mesh geometry first: the backend choice is mesh-aware (an (R, C)
         # grid with C > 1 restricts "auto" to vertex-sharded backends and
@@ -224,7 +244,7 @@ class PageRankEngine:
             # cached conversions stay valid) — transplant them so the
             # prepare-time warming above actually serves the queries.
             for attr in ("_ell_cache", "_ell_part_cache",
-                         "_part_cols_cache"):
+                         "_part_cols_cache", "_graph_version"):
                 cache = getattr(g, attr, None)
                 if cache is not None:
                     object.__setattr__(self.graph, attr, cache)
@@ -249,6 +269,9 @@ class PageRankEngine:
             mesh=self._mesh_shape,
             prepare_count=self.prepare_count,
             has_residual_state=self._state is not None,
+            graph_version=self.graph_version,
+            cache=(self.result_cache.stats()
+                   if self.result_cache is not None else None),
         )
         if include_plan:
             d["plan"] = self.plan(RankQuery()).explain()
@@ -269,6 +292,8 @@ class PageRankEngine:
             default_method=self.engine_plan.default_method,
             dtype=self.engine_plan.dtype,
             has_residual_state=self._state is not None,
+            graph_version=self.graph_version,
+            cache=self.cache_policy,
         )
 
     def plan(self, query: Query) -> ExecutionPlan:
@@ -306,6 +331,14 @@ class PageRankEngine:
                 result=envs, plan=ep,
                 values=tuple(e.values for e in envs),
                 wall_time_s=time.perf_counter() - t0)
+        if (self.result_cache is not None
+                and isinstance(query, (PPRQuery, TopKQuery))
+                and not query.no_cache):
+            env = self.result_cache.serve(self, query)
+            if env is not None:
+                return env
+            # None: not cacheable (dense rows, power family, ...) — run
+            # exactly as an uncached engine would.
         ep = self.plan(query)
         t0 = time.perf_counter()
         if isinstance(query, RankQuery):
@@ -342,7 +375,11 @@ class PageRankEngine:
         return SOLVERS[ep.method](self.graph, ep.cfg,
                                   step_impl=self.step_impl, ctx=self._ctx)
 
-    def _exec_ppr(self, p_batch, ep: ExecutionPlan) -> BatchSolverResult:
+    def _exec_ppr(self, p_batch, ep: ExecutionPlan,
+                  return_state: bool = False) -> BatchSolverResult:
+        # return_state=True additionally returns the unnormalized (PiBar,
+        # H) rows at quiescence — the result cache's fill path consumes
+        # them; ITA paths only (power has no residual state).
         cfg = ep.cfg
         p_batch = jnp.asarray(p_batch)
         if ep.path == "distributed-batch":
@@ -351,13 +388,21 @@ class PageRankEngine:
                 max_iter=cfg.max_iter, dtype=cfg.dtype,
                 step_impl=self.step_impl, ctx=self._ctx,
                 ell_widths=self.engine_plan.ell_widths,
-                row_align=self.engine_plan.row_align)
+                row_align=self.engine_plan.row_align,
+                return_state=return_state)
         if ep.path == "donated-batch":
-            return self._solve_batch_donated(p_batch, cfg)
+            return self._solve_batch_donated(p_batch, cfg,
+                                             return_state=return_state)
         fn = ita_batch if cfg.batch_method == "ita" else power_method_batch
         kw = cfg.kwargs_for(fn)
         kw["step_impl"] = self.step_impl
         kw["ctx"] = self._ctx
+        if return_state:
+            if fn is not ita_batch:
+                raise ValueError(
+                    "return_state=True needs the ITA batch family; "
+                    f"cfg.batch_method={cfg.batch_method!r}")
+            kw["return_state"] = True
         return fn(self.graph, p_batch, **kw)
 
     def _exec_topk(self, q: TopKQuery, ep: ExecutionPlan) -> TopKResult:
@@ -384,7 +429,8 @@ class PageRankEngine:
             step_impl=self.step_impl, ctx=self._ctx, return_state=True)
         return result
 
-    def _solve_batch_donated(self, p_batch, cfg: BatchConfig):
+    def _solve_batch_donated(self, p_batch, cfg: BatchConfig,
+                             return_state: bool = False):
         """Accelerator path: per-engine compiled batched-ITA loop with the
         [B, n] information buffer donated — the serving loop then updates
         in place instead of allocating per micro-batch.  Numerics are the
@@ -404,15 +450,18 @@ class PageRankEngine:
         t0 = time.perf_counter()
         H0 = (p_batch.astype(cfg.dtype) * self.graph.n).astype(cfg.dtype)
         H, PiBar, n_active, it = fn(H0)
-        PiBar = PiBar + H
-        Pi = PiBar / jnp.sum(PiBar, axis=1, keepdims=True)
+        U = PiBar + H
+        Pi = U / jnp.sum(U, axis=1, keepdims=True)
         Pi = jax.block_until_ready(Pi)
-        return BatchSolverResult(
+        result = BatchSolverResult(
             pi=Pi, iterations=int(it), residual=float(cfg.xi),
             converged=bool(int(n_active) == 0),
             method=f"ita_batch[{self.step_impl}]",
             batch=int(p_batch.shape[0]),
             wall_time_s=time.perf_counter() - t0)
+        if return_state:
+            return result, (PiBar, H)
+        return result
 
     # ------------------------------------------------------------------ #
     # legacy query methods — thin wrappers over run(), bit-identical

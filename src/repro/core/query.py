@@ -75,11 +75,15 @@ class PPRQuery(Query):
 
     ``p_batch`` is the float[B, n] operand (one preference row per
     query); ``cfg`` a :class:`~repro.core.solver_config.BatchConfig`
-    (``None`` ⇒ engine defaults).
+    (``None`` ⇒ engine defaults).  ``no_cache=True`` bypasses the
+    engine's result cache (when one is attached) for this query only —
+    rows solve on device even if cached; the cache is neither read nor
+    written.
     """
 
     p_batch: Any = None
     cfg: Optional[BatchConfig] = None
+    no_cache: bool = False
 
     kind = "ppr"
 
@@ -89,12 +93,14 @@ class TopKQuery(Query):
     """Served PPR: per-seed top-``k`` vertices and scores.
 
     ``sources`` is an int[B] sequence of seed vertices (classic one-hot
-    personalizations).
+    personalizations).  ``no_cache=True`` bypasses the engine's result
+    cache for this query only (see :class:`PPRQuery`).
     """
 
     sources: Any = None
     k: int = 10
     cfg: Optional[BatchConfig] = None
+    no_cache: bool = False
 
     kind = "topk"
 
@@ -210,6 +216,11 @@ class ResultEnvelope:
     residual: Optional[float] = None
     converged: Optional[bool] = None
     wall_time_s: Optional[float] = None
+    # Set only when the answer came through the result cache
+    # (core/cache.py): per-call row counts (hits/misses/revalidated),
+    # the graph_version served, and cumulative totals.  ``None`` means
+    # the query ran on device exactly as an uncached engine would.
+    cache_stats: Optional[dict] = None
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +245,8 @@ class PlannerState:
     default_method: str
     dtype: Any
     has_residual_state: bool
+    graph_version: int = 0          # monotone edge-set version (deltas bump)
+    cache: Any = None               # CachePolicy when a result cache is on
 
 
 def _check_step_compat(state: PlannerState, cfg) -> None:
@@ -378,6 +391,17 @@ def _plan_batch_common(state: PlannerState, cfg, B: int, kind: str
             path = "batched-host-loop"
             reasons.append("host-driven push -> per-row python loop, "
                            "identical numerics")
+    if state.cache is not None and cfg.batch_method == "ita":
+        refresh = ("stale entries revalidate via ita_incremental from "
+                   "their stored (π̄, h) pair" if state.cache.revalidate
+                   else "stale entries drop and re-solve")
+        reasons.append(
+            f"result cache attached (capacity={state.cache.capacity}): "
+            f"one-hot rows keyed (graph_version={state.graph_version}, "
+            f"seed, cfg); staleness bound ξ={cfg.xi:g} — {refresh}")
+    elif state.cache is not None:
+        reasons.append("result cache attached but power batches carry no "
+                       "(π̄, h) state to revalidate — cache bypassed")
     return ExecutionPlan(query=kind, backend=state.step_impl, path=path,
                          method=f"{cfg.batch_method}_batch", mesh=mesh,
                          micro_batch=B, cfg=cfg, cost=cost * max(B, 1),

@@ -73,6 +73,21 @@ class Graph:
     def avg_degree(self) -> float:
         return self.m / max(self.n, 1)
 
+    @property
+    def graph_version(self) -> int:
+        """Monotone edge-set version, bumped by :func:`apply_edge_delta`.
+
+        Freshly built graphs are version 0; every delta produces a graph
+        stamped one higher than its parent.  The engine exposes this as
+        ``PageRankEngine.graph_version`` and the result cache
+        (``repro.core.cache``) keys entries on it, so an answer computed
+        against an older edge set can never be served verbatim after a
+        delta — it is either revalidated or recomputed.  Stored outside
+        the pytree (like the layout caches): jit/vmap boundaries see only
+        the edge arrays, and flattened copies reset to 0.
+        """
+        return int(getattr(self, "_graph_version", 0))
+
     def inv_out_deg(self, dtype=jnp.float64) -> jnp.ndarray:
         """1/deg with 0 at dangling vertices (the raw-P column scale)."""
         deg = self.out_deg.astype(dtype)
@@ -226,6 +241,11 @@ def apply_edge_delta(g: Graph, add=(), remove=()) -> Graph:
     object.__setattr__(g_new, "_ell_cache", {})
     object.__setattr__(g_new, "_ell_part_cache", {})
     object.__setattr__(g_new, "_part_cols_cache", {})
+    # Monotone version stamp: the engine and the result cache key prepared/
+    # cached state on it, so a delta'd graph is *visibly* a different edge
+    # set even to layers that never inspect src/dst
+    # (tests/test_cache.py::test_stale_entry_never_served_after_delta).
+    object.__setattr__(g_new, "_graph_version", g.graph_version + 1)
     return g_new
 
 

@@ -79,6 +79,11 @@ def main(argv=None) -> int:
                     help="serve sharded over an (R, C) device grid: batch "
                          "rows on 'data', vertices on 'model' (C>1 needs "
                          "--step-impl dense)")
+    ap.add_argument("--cache", action="store_true",
+                    help="attach the result cache (core/cache.py): repeat "
+                         "seeds answer from memory, ita method only")
+    ap.add_argument("--cache-capacity", type=int, default=4096,
+                    help="max cached seeds before LRU eviction")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: tiny graph, short stream")
@@ -96,7 +101,8 @@ def main(argv=None) -> int:
     jax.config.update("jax_enable_x64", True)
     import numpy as np
 
-    from ..core import BatchConfig, EnginePlan, PageRankEngine, TopKQuery
+    from ..core import (BatchConfig, CachePolicy, EnginePlan, PageRankEngine,
+                        TopKQuery)
     from ..graph import paper_dataset
 
     mesh = None
@@ -105,23 +111,27 @@ def main(argv=None) -> int:
             mesh = tuple(int(x) for x in args.mesh.split(","))
         except ValueError:
             ap.error(f"--mesh must be R or R,C; got {args.mesh!r}")
+        if args.method == "power":
+            # only ITA batches run through the sharded pass; serving a
+            # power stream "with --mesh" would silently run single-device
+            ap.error("--mesh applies to --method ita only (power batches "
+                     "run single-device); drop --mesh or use --method ita")
+    if args.cache and args.method == "power":
+        ap.error("--cache needs --method ita (power rows carry no "
+                 "(π̄, h) state to revalidate)")
 
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
     print(f"graph: {g.stats()}")
 
     # 1. prepare — the one-time session cost every query amortizes
     t0 = time.perf_counter()
+    cache = CachePolicy(capacity=args.cache_capacity) if args.cache else None
     engine = PageRankEngine(g, EnginePlan(step_impl=args.step_impl,
-                                          c=args.c, mesh=mesh))
+                                          c=args.c, mesh=mesh, cache=cache))
     t_prepare = time.perf_counter() - t0
     desc = engine.describe(include_plan=False)  # serving plan prints below
     print(f"engine: {desc}  prepare: {t_prepare*1e3:.1f} ms")
-    # only ITA batches run through the sharded pass; report what actually
-    # happens rather than what was requested
-    mesh_eff = desc["mesh"] if args.method == "ita" else None
-    if mesh is not None and mesh_eff is None:
-        print("warning: --mesh applies to method=ita only; "
-              "power batches run single-device")
+    mesh_eff = desc["mesh"]
 
     cfg = BatchConfig(batch_method=args.method, c=args.c, xi=args.xi,
                       tol=args.xi)
@@ -139,7 +149,7 @@ def main(argv=None) -> int:
     t_compile = time.perf_counter() - t0
 
     # 3. serve — drain the stream in fixed-shape micro-batches
-    lat, answered = [], 0
+    lat, n_reals, answered = [], [], 0
     sample = None
     t_serve0 = time.perf_counter()
     for lo in range(0, args.queries, B):
@@ -151,6 +161,7 @@ def main(argv=None) -> int:
         tk = engine.run(TopKQuery(sources=req, k=args.topk, cfg=cfg)).result
         jax.block_until_ready(tk.scores)
         lat.append(time.perf_counter() - t1)
+        n_reals.append(n_real)
         answered += n_real
         if sample is None:
             sample = (int(req[0]), np.asarray(tk.indices[0]),
@@ -159,14 +170,26 @@ def main(argv=None) -> int:
 
     # 4. report
     lat_ms = np.asarray(lat) * 1e3
+    n_reals = np.asarray(n_reals)
+    # per-query latency attributes each batch's wall time to the REAL
+    # queries it answered: the padded tail batch costs the same device
+    # pass as a full one, so dividing by B there understated its queries'
+    # latency — weight each batch's per-query figure by n_real instead.
+    per_q_ms = np.repeat(lat_ms / n_reals, n_reals)
     qps = answered / t_serve
     print(f"served {answered} queries in {len(lat)} micro-batches of {B} "
           f"(method={args.method}, step_impl={engine.step_impl}, "
           f"mesh={mesh_eff}, zipf={args.zipf})")
     print(f"compile: {t_compile*1e3:.1f} ms   batch p50/p99: "
           f"{np.percentile(lat_ms, 50):.1f}/{np.percentile(lat_ms, 99):.1f} ms"
-          f"   per-query p50: {np.percentile(lat_ms, 50)/B:.2f} ms   "
+          f"   per-query p50: {np.percentile(per_q_ms, 50):.2f} ms   "
           f"throughput: {qps:.1f} q/s")
+    if engine.result_cache is not None:
+        s = engine.result_cache.stats()
+        print(f"cache: hit_rate={s['hit_rate']:.2f} hits={s['hits']} "
+              f"misses={s['misses']} revalidated={s['revalidated']} "
+              f"entries={s['entries']} evictions={s['evictions']} "
+              f"(graph_version={engine.graph_version})")
     src_v, idx, sc = sample
     print(f"sample answer — seed {src_v}: "
           f"{[(int(i), float(s)) for i, s in zip(idx, sc)]}")

@@ -1,0 +1,293 @@
+"""Result cache over ``engine.run``: hits bit-identical, deltas revalidate.
+
+The correctness contract of ``core/cache.py`` (see its module docstring):
+
+  * a **hit** returns bit-identical values to what the uncached engine
+    produces — rows of the batched ITA loop are batch-composition
+    invariant and ``lax.top_k`` is deterministic per row;
+  * a **stale** entry (graph version mismatch after ``apply_edge_delta``)
+    is never served: it is revalidated by one incremental cascade from
+    its stored (π̄, h) pair — or dropped and re-solved under
+    ``CachePolicy(revalidate=False)`` — and the refreshed row matches a
+    fresh solve within the config's ξ, on the single-device engine AND on
+    the (R, C) mesh engines (subprocess, tests/_mesh_env.py).
+"""
+
+import numpy as np
+import pytest
+
+from _mesh_env import DEVICES, MESH, run_py
+from repro.core import (
+    BatchConfig,
+    CachePolicy,
+    EnginePlan,
+    PageRankEngine,
+    PPRQuery,
+    TopKQuery,
+    one_hot_personalizations,
+)
+from repro.graph import apply_edge_delta, web_graph
+
+CFG = BatchConfig(batch_method="ita", xi=1e-10)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return web_graph(400, 3200, dangling_frac=0.2, seed=17)
+
+
+def _absent_edges(g, count, rng):
+    """Sample ``count`` (src, dst) pairs not currently in ``g`` — clean
+    adds for ``apply_edge_delta`` (adding an existing edge raises)."""
+    have = set(zip(np.asarray(g.src).tolist(), np.asarray(g.dst).tolist()))
+    out = []
+    while len(out) < count:
+        u, v = (int(x) for x in rng.integers(0, g.n, size=2))
+        if u != v and (u, v) not in have:
+            have.add((u, v))
+            out.append((u, v))
+    return out
+
+
+def _engines(g, **policy):
+    plain = PageRankEngine(g, EnginePlan(step_impl="dense"))
+    cached = PageRankEngine(g, EnginePlan(step_impl="dense", cache=CachePolicy(**policy)))
+    return plain, cached
+
+
+class TestHitIdentity:
+    def test_topk_hit_bit_identical(self, g):
+        plain, cached = _engines(g)
+        q = TopKQuery(sources=(1, 5, 9), k=5, cfg=CFG)
+        ref = plain.run(q)
+        first = cached.run(q)
+        assert first.cache_stats["misses"] == 3
+        assert first.cache_stats["hits"] == 0
+        second = cached.run(q)
+        assert second.cache_stats["hits"] == 3
+        assert second.cache_stats["misses"] == 0
+        for env in (first, second):
+            assert np.array_equal(np.asarray(env.result.indices), np.asarray(ref.result.indices))
+            assert np.array_equal(np.asarray(env.result.scores), np.asarray(ref.result.scores))
+
+    def test_ppr_one_hot_hit_bit_identical(self, g):
+        plain, cached = _engines(g)
+        q = PPRQuery(p_batch=one_hot_personalizations(g, [2, 7]), cfg=CFG)
+        ref = plain.run(q)
+        cached.run(q)
+        env = cached.run(q)
+        assert env.cache_stats["hits"] == 2
+        assert np.array_equal(np.asarray(env.result.pi), np.asarray(ref.result.pi))
+
+    def test_partial_hit_fills_only_misses(self, g):
+        plain, cached = _engines(g)
+        cached.run(TopKQuery(sources=(1, 2), k=4, cfg=CFG))
+        env = cached.run(TopKQuery(sources=(2, 3), k=4, cfg=CFG))
+        assert env.cache_stats["hits"] == 1
+        assert env.cache_stats["misses"] == 1
+        ref = plain.run(TopKQuery(sources=(2, 3), k=4, cfg=CFG))
+        assert np.array_equal(np.asarray(env.result.indices), np.asarray(ref.result.indices))
+        assert np.array_equal(np.asarray(env.result.scores), np.asarray(ref.result.scores))
+
+    def test_duplicate_rows_resolve_from_one_entry(self, g):
+        plain, cached = _engines(g)
+        q = TopKQuery(sources=(4, 4, 9), k=3, cfg=CFG)
+        env = cached.run(q)
+        # rows of a miss seed count as misses, duplicates included — they
+        # arrived in the same micro-batch the fill solved
+        assert env.cache_stats["misses"] == 3
+        assert len(cached.result_cache) == 2
+        ref = plain.run(q)
+        assert np.array_equal(np.asarray(env.result.scores), np.asarray(ref.result.scores))
+
+
+class TestBypass:
+    def test_dense_rows_bypass(self, g):
+        plain, cached = _engines(g)
+        P = np.full((2, g.n), 1.0 / g.n)
+        env = cached.run(PPRQuery(p_batch=P, cfg=CFG))
+        assert env.cache_stats is None
+        assert cached.result_cache.bypassed == 1
+        assert len(cached.result_cache) == 0
+        ref = plain.run(PPRQuery(p_batch=P, cfg=CFG))
+        assert np.array_equal(np.asarray(env.result.pi), np.asarray(ref.result.pi))
+
+    def test_no_cache_flag_bypasses(self, g):
+        _, cached = _engines(g)
+        env = cached.run(TopKQuery(sources=(1,), k=3, cfg=CFG, no_cache=True))
+        assert env.cache_stats is None
+        assert len(cached.result_cache) == 0
+
+    def test_power_family_bypasses(self, g):
+        _, cached = _engines(g)
+        cfg = BatchConfig(batch_method="power", tol=1e-12)
+        env = cached.run(TopKQuery(sources=(1, 2), k=3, cfg=cfg))
+        assert env.cache_stats is None
+        assert cached.result_cache.bypassed == 1
+
+
+class TestRevalidation:
+    def test_stale_entry_never_served_after_delta(self, g):
+        _, cached = _engines(g)
+        q = PPRQuery(p_batch=one_hot_personalizations(g, [1, 5, 9]), cfg=CFG)
+        cached.run(q)
+        v0 = cached.graph_version
+        cached.update(add=_absent_edges(cached.graph, 3, np.random.default_rng(0)))
+        assert cached.graph_version == v0 + 1
+        env = cached.run(q)
+        assert env.cache_stats["revalidated"] == 3
+        assert env.cache_stats["hits"] == 0
+        assert env.cache_stats["misses"] == 0
+        fresh = PageRankEngine(cached.graph, EnginePlan(step_impl="dense"))
+        ref = fresh.run(q)
+        np.testing.assert_allclose(np.asarray(env.result.pi), np.asarray(ref.result.pi), atol=1e-8)
+        again = cached.run(q)
+        assert again.cache_stats["hits"] == 3
+        assert again.cache_stats["revalidated"] == 0
+
+    def test_drop_policy_re_solves(self, g):
+        _, cached = _engines(g, revalidate=False)
+        q = TopKQuery(sources=(1, 5), k=4, cfg=CFG)
+        cached.run(q)
+        cached.update(add=_absent_edges(cached.graph, 2, np.random.default_rng(3)))
+        env = cached.run(q)
+        assert env.cache_stats["misses"] == 2
+        assert env.cache_stats["revalidated"] == 0
+        fresh = PageRankEngine(cached.graph, EnginePlan(step_impl="dense"))
+        ref = fresh.run(q)
+        assert np.array_equal(np.asarray(env.result.indices), np.asarray(ref.result.indices))
+        assert np.array_equal(np.asarray(env.result.scores), np.asarray(ref.result.scores))
+
+    def test_chained_deltas_revalidate_once(self, g):
+        """Three deltas land between serves; one cascade from the stored
+        pair still matches a fresh solve — the warm start is the run
+        invariant evaluated under the CURRENT graph, so intermediate
+        versions never need replaying."""
+        _, cached = _engines(g)
+        q = PPRQuery(p_batch=one_hot_personalizations(g, [3, 11]), cfg=CFG)
+        cached.run(q)
+        rng = np.random.default_rng(1)
+        e1 = _absent_edges(cached.graph, 2, rng)
+        cached.update(add=e1)
+        e2 = _absent_edges(cached.graph, 2, rng)
+        cached.update(add=e2, remove=[e1[0]])
+        e3 = _absent_edges(cached.graph, 2, rng)
+        cached.update(add=e3, remove=[e2[1]])
+        assert cached.graph_version == 3
+        env = cached.run(q)
+        assert env.cache_stats["revalidated"] == 2
+        fresh = PageRankEngine(cached.graph, EnginePlan(step_impl="dense"))
+        ref = fresh.run(q)
+        np.testing.assert_allclose(np.asarray(env.result.pi), np.asarray(ref.result.pi), atol=1e-8)
+
+
+class TestPolicy:
+    def test_lru_eviction(self, g):
+        _, cached = _engines(g, capacity=2)
+        for s in (1, 2, 3):
+            cached.run(TopKQuery(sources=(s,), k=3, cfg=CFG))
+        assert len(cached.result_cache) == 2
+        assert cached.result_cache.evictions == 1
+        env = cached.run(TopKQuery(sources=(1,), k=3, cfg=CFG))
+        assert env.cache_stats["misses"] == 1  # seed 1 was the LRU victim
+        env = cached.run(TopKQuery(sources=(3,), k=3, cfg=CFG))
+        assert env.cache_stats["hits"] == 1
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            CachePolicy(capacity=0)
+        with pytest.raises(ValueError):
+            CachePolicy(max_views=0)
+
+
+class TestGraphVersion:
+    def test_apply_edge_delta_bumps_version(self, g):
+        (e,) = _absent_edges(g, 1, np.random.default_rng(2))
+        g1 = apply_edge_delta(g, add=[e])
+        g2 = apply_edge_delta(g1, remove=[e])
+        assert g.graph_version == 0
+        assert g1.graph_version == 1
+        assert g2.graph_version == 2
+
+    def test_describe_reports_version_and_cache(self, g):
+        _, cached = _engines(g)
+        d = cached.describe()
+        assert d["graph_version"] == 0
+        assert d["cache"]["entries"] == 0
+        cached.run(TopKQuery(sources=(1,), k=3, cfg=CFG))
+        assert cached.describe()["cache"]["entries"] == 1
+        plain = PageRankEngine(g, EnginePlan(step_impl="dense"))
+        assert plain.describe()["cache"] is None
+
+
+class TestPlannerVisibility:
+    def test_explain_names_cache_and_staleness_bound(self, g):
+        _, cached = _engines(g)
+        text = cached.plan(TopKQuery(sources=(1, 2), k=3, cfg=CFG)).explain()
+        assert "result cache attached" in text
+        assert "staleness bound" in text
+
+    def test_explain_power_bypass(self, g):
+        _, cached = _engines(g)
+        cfg = BatchConfig(batch_method="power", tol=1e-12)
+        text = cached.plan(TopKQuery(sources=(1, 2), k=3, cfg=cfg)).explain()
+        assert "cache bypassed" in text
+
+
+_MESH_SCRIPT = """
+import jax, json
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+import jax.numpy as jnp
+from repro.graph import web_graph
+from repro.core import (BatchConfig, CachePolicy, EnginePlan,
+                        PageRankEngine, TopKQuery)
+g = web_graph(600, 4200, dangling_frac=0.2, seed=11)
+cfg = BatchConfig(batch_method="ita", xi=1e-10)
+q = TopKQuery(sources=(1, 7, 42, 99, 311, 17, 256, 3), k=5, cfg=cfg)
+plain = PageRankEngine(g, EnginePlan(step_impl="dense", mesh=(R, C)))
+cached = PageRankEngine(
+    g, EnginePlan(step_impl="dense", mesh=(R, C), cache=CachePolicy()))
+ref = plain.run(q)
+first = cached.run(q)
+second = cached.run(q)
+rng = np.random.default_rng(0)
+have = set(zip(np.asarray(g.src).tolist(), np.asarray(g.dst).tolist()))
+add = []
+while len(add) < 4:
+    u, v = (int(x) for x in rng.integers(0, g.n, size=2))
+    if u != v and (u, v) not in have:
+        have.add((u, v))
+        add.append((u, v))
+cached.update(add=add)
+env = cached.run(q)
+fresh = PageRankEngine(cached.graph,
+                       EnginePlan(step_impl="dense", mesh=(R, C)))
+refu = fresh.run(q)
+print(json.dumps({
+    "hit_scores_equal": bool(
+        jnp.array_equal(second.result.scores, ref.result.scores)),
+    "hit_indices_equal": bool(
+        jnp.array_equal(second.result.indices, ref.result.indices)),
+    "first_misses": first.cache_stats["misses"],
+    "second_hits": second.cache_stats["hits"],
+    "revalidated": env.cache_stats["revalidated"],
+    "reval_err": float(jnp.max(jnp.abs(
+        env.result.scores - refu.result.scores))),
+    "version": cached.graph_version}))
+"""
+
+
+def test_mesh_cache_hits_and_revalidation():
+    """The mesh half of the acceptance bar: on the matrix cell's (R, C)
+    grid, cached hits are bit-identical to the uncached mesh engine, and
+    after a delta every entry revalidates to within solver tolerance."""
+    R, C = MESH
+    if R * C > DEVICES:
+        pytest.skip(f"grid {MESH} needs {R * C} devices, have {DEVICES}")
+    out = run_py(f"R, C = {R}, {C}\n" + _MESH_SCRIPT)
+    assert out["hit_scores_equal"] and out["hit_indices_equal"], out
+    assert out["first_misses"] == 8 and out["second_hits"] == 8, out
+    assert out["revalidated"] == 8, out
+    assert out["reval_err"] < 1e-8, out
+    assert out["version"] == 1, out

@@ -1,6 +1,8 @@
 """Beyond-paper extensions: incremental (dynamic-graph) ITA and
 Gauss-Southwell prioritized push — both must agree with the reference
 solver, and the incremental path must be much cheaper than re-solving."""
+import math
+
 import numpy as np
 import pytest
 
@@ -62,6 +64,21 @@ class TestIncremental:
         r = ita_incremental(g0, g0, pi_bar, h, xi=1e-12)
         assert r.iterations <= 3, r.iterations
 
+    def test_chained_updates_match_fresh(self):
+        """Three successive deltas, each corrected from the previous
+        call's ``return_state`` pair — the chained (π̄, h) state never
+        drifts from a from-scratch solve (the result cache's
+        revalidation path leans on exactly this)."""
+        g = web_graph(900, 7200, dangling_frac=0.15, seed=11)
+        pi_bar, h, _, _ = ita_residual_state(g, xi=1e-13)
+        for step in range(3):
+            g_new = _edit_graph(g, n_add=25, n_del=25, seed=13 + step)
+            r, (pi_bar, h) = ita_incremental(
+                g, g_new, pi_bar, h, xi=1e-13, return_state=True)
+            g = g_new
+            pi_ref = power_method(g, tol=1e-14, max_iter=500).pi
+            np.testing.assert_allclose(r.pi, pi_ref, atol=1e-10)
+
 
 class TestPrioritized:
     def test_matches_reference(self):
@@ -69,6 +86,21 @@ class TestPrioritized:
         r = ita_prioritized(g, xi=1e-13, k=200)
         pi_ref = power_method(g, tol=1e-14, max_iter=500).pi
         np.testing.assert_allclose(r.pi, pi_ref, atol=1e-10)
+
+    def test_no_extra_round(self):
+        """Regression for the post-push eligibility count: a round that
+        clears the last super-ξ residual must terminate the loop, not
+        charge one extra zero-mass push.  On the 4-cycle every round
+        multiplies the whole residual by exactly c (k=n, out-degree 1),
+        so the round count is closed-form: T = ceil(log ξ / log c), and
+        each round pushes all 4 unit-degree vertices."""
+        g = graph_from_edges([0, 1, 2, 3], [1, 2, 3, 0], 4)
+        c, xi = 0.85, 1e-10
+        expected = math.ceil(math.log(xi) / math.log(c))
+        r = ita_prioritized(g, c=c, xi=xi, k=4)
+        assert r.iterations == expected, (r.iterations, expected)
+        assert r.ops == 4 * expected, (r.ops, expected)
+        assert r.converged
 
     def test_order_freedom_same_answer_any_k(self):
         g = web_graph(600, 4800, dangling_frac=0.15, seed=9)
