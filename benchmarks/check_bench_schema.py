@@ -56,6 +56,14 @@ SCHEMAS: dict[str, tuple] = {
         "revalidated_frac", "reval_err", "within_tol", "bit_identical",
         "cache", "method", "note",
     ),
+    "serving": (
+        "graph", "batch", "queries", "queue_cap", "zipf", "k", "xi",
+        "t_batch_ms", "capacity_qps", "deadline_batches", "deadline_ms",
+        "loads", "shed_frac_low", "shed_frac_sat", "degraded_frac_low",
+        "degraded_frac_sat", "p99_low_ms", "p99_sat_ms",
+        "p99_bounded_at_sat", "clean_below_saturation",
+        "overload_protected", "bit_identical", "method", "note",
+    ),
 }
 
 # per-key type expectations (applied when the key is present)
@@ -65,6 +73,9 @@ _TYPES = {
     "bit_identical": bool, "within_2pct": bool, "within_tol": bool,
     "method": str, "note": str, "plan": str,
     "queries": int, "k": int, "cache": dict,
+    "loads": list, "queue_cap": int,
+    "p99_bounded_at_sat": bool, "clean_below_saturation": bool,
+    "overload_protected": bool,
 }
 
 # bench family -> drift rules for --compare:
@@ -97,6 +108,19 @@ DRIFT: dict[str, dict] = {
         equal=("bench", "bit_identical", "within_tol", "method"),
         ratio={"speedup_p50": 6.0},
         absolute={"hit_rate": 0.2, "revalidated_frac": 0.3},
+    ),
+    "serving": dict(
+        # the sweep runs on a virtual clock with modeled batch cost, and
+        # loads/deadline are multiples of the calibrated batch time —
+        # shed/degraded fractions and the claim booleans are therefore
+        # machine-independent (only *_ms / *_qps keys carry hardware);
+        # the absolute bands absorb float boundary flips at dispatch
+        # decisions, not real behavior changes.
+        equal=("bench", "bit_identical", "p99_bounded_at_sat",
+               "clean_below_saturation", "overload_protected", "method"),
+        ratio={},
+        absolute={"shed_frac_low": 0.05, "shed_frac_sat": 0.15,
+                  "degraded_frac_low": 0.05, "degraded_frac_sat": 0.2},
     ),
 }
 

@@ -46,13 +46,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .query import PPRQuery, ResultEnvelope, TopKQuery
+from .query import ResultEnvelope, TopKQuery
 from .solver_config import BatchConfig
 
 __all__ = ["CachePolicy", "CacheEntry", "ResultCache"]
@@ -172,6 +172,17 @@ class ResultCache:
 
     def clear(self) -> None:
         self._entries.clear()
+
+    def peek(self, seed: int, cfg, version: int) -> bool:
+        """True iff ``seed`` has a *fresh* entry under ``cfg`` — a pure
+        probe for cache-aware admission (serve/admission.py): no counter
+        moves, no LRU bump, no revalidation.  A stale entry reports
+        False even when the policy would revalidate it on ``serve`` —
+        revalidation costs device work, so it must queue like a miss."""
+        if not isinstance(cfg, BatchConfig) or cfg.batch_method != "ita":
+            return False
+        entry = self._entries.get((int(seed), cfg.static_key()))
+        return entry is not None and entry.version == int(version)
 
     def _get(self, key) -> Optional[CacheEntry]:
         entry = self._entries.get(key)

@@ -221,6 +221,11 @@ class ResultEnvelope:
     # the graph_version served, and cumulative totals.  ``None`` means
     # the query ran on device exactly as an uncached engine would.
     cache_stats: Optional[dict] = None
+    # Set by the serving tier (serve/service.py) when the answer was
+    # produced at a degraded fidelity level (looser ξ or a cheaper
+    # backend under overload).  False everywhere else: a direct
+    # ``engine.run`` answer is always full fidelity.
+    degraded: bool = False
 
 
 # ---------------------------------------------------------------------------

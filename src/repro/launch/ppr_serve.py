@@ -1,38 +1,33 @@
-"""PPR query serving — the engine's request loop.
+"""PPR query serving — the production tier in front of the engine.
 
-    PYTHONPATH=src python -m repro.launch.ppr_serve --dataset web-Google \
-        --scale 0.02 --queries 256 --batch 16 --step-impl dense
     PYTHONPATH=src python -m repro.launch.ppr_serve --smoke
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-        python -m repro.launch.ppr_serve --smoke --mesh 8,1
+    PYTHONPATH=src python -m repro.launch.ppr_serve --dataset web-Google \
+        --scale 0.02 --qps 200 --deadline-ms 250 --queue-cap 64 \
+        --policy full
+    PYTHONPATH=src python -m repro.launch.ppr_serve --smoke --qps 100000 \
+        --deadline-ms 50 --queue-cap 8 --expect-shed
 
-The millions-of-users shape from the ROADMAP, reduced to one host: a
-stream of personalized-PageRank requests (seed vertices, skewed toward
-popular pages by a Zipf law over in-degree rank) is drained in fixed-size
-micro-batches of one-hot personalizations, each answered by a single
-``engine.run(TopKQuery(...))`` — one [B, n] device pass per micro-batch.
-Before serving, the driver prints the planner's decision for the
-micro-batch shape (``engine.plan(query).explain()`` — backend, mesh
-layout, path, why; see docs/API.md).
+Thin CLI over ``repro.serve`` (see docs/SERVING.md): arrivals →
+admission (token bucket + cache-aware bypass) → bounded queue →
+deadline-aware batcher → ``engine.run(TopKQuery)``.  Without ``--qps``
+the stream is the classic closed-loop saturating drain (``--batch``
+clients, zero think time — offered load tracks capacity); with ``--qps``
+it is an open-loop Poisson arrival process at that offered rate, the
+shape that actually exercises shedding and degradation.
 
-Loop structure mirrors ``launch/serve.py``'s prefill/decode split:
-  1. **prepare** — build the engine once (vertex classification, ELL
-     bucketing, backend ctx); this is the prefill-analogue cost;
-  2. **warmup** — one throwaway micro-batch so jit compilation happens
-     outside the measured window (every later batch reuses the trace:
-     the tail batch is padded to the same [B, n] shape);
-  3. **serve** — drain the queue, recording per-batch latency;
-  4. report queries/s and latency percentiles.
+``--policy`` picks the protection stack:
+  * ``none``     — queue + deadline batcher only (still sheds on full);
+  * ``throttle`` — adds the token bucket (``--rate-limit``, default:
+                   the calibrated capacity of one engine);
+  * ``degrade``  — adds the hysteretic fidelity ladder (looser ξ);
+  * ``full``     — both.
 
-On accelerators the engine's donated batched-ITA path updates the [B, n]
-information buffer in place across micro-batches.
-
-``--mesh R[,C]`` serves every micro-batch sharded over a device grid
-(``EnginePlan(mesh=(R, C))``): batch rows over the "data" axis, vertices
-over "model" when C > 1 — see docs/SHARDING.md.  The grid must fit
-``jax.devices()``; in CI that is the 8-device simulated host mesh
-(XLA_FLAGS=--xla_force_host_platform_device_count=8).  Answers are
-bit-identical to the unsharded engine on an (R, 1) grid.
+``--sim`` replays the identical loop on a virtual clock with modeled
+batch cost (calibrated from one real warmup batch) — deterministic
+queueing dynamics, no wall-clock dependence; the mode every serving
+test and the drift-checked benchmark run in.  ``--expect-shed`` makes
+the process exit nonzero unless overload protection actually shed
+requests — the CI overload smoke's assertion.
 """
 from __future__ import annotations
 
@@ -41,20 +36,8 @@ import time
 
 import jax
 
-
-def zipf_seeds(g, n_queries: int, alpha: float, rng):
-    """Seed vertices for the query stream, Zipf-skewed by in-degree rank.
-
-    ``alpha=0`` is uniform; larger alpha concentrates queries on popular
-    (high in-degree) vertices — the realistic serving distribution.
-    """
-    import numpy as np
-
-    if alpha <= 0:
-        return rng.integers(0, g.n, size=n_queries)
-    rank = np.argsort(-np.asarray(g.in_deg), kind="stable")  # popular first
-    w = 1.0 / np.arange(1, g.n + 1, dtype=np.float64) ** alpha
-    return rank[rng.choice(g.n, size=n_queries, p=w / w.sum())]
+# re-export: historical home of this helper (PR 5/6 callers import it here)
+from ..serve.workload import zipf_seeds  # noqa: F401
 
 
 def main(argv=None) -> int:
@@ -81,12 +64,34 @@ def main(argv=None) -> int:
                          "--step-impl dense)")
     ap.add_argument("--cache", action="store_true",
                     help="attach the result cache (core/cache.py): repeat "
-                         "seeds answer from memory, ita method only")
+                         "seeds bypass the queue entirely, ita method only")
     ap.add_argument("--cache-capacity", type=int, default=4096,
                     help="max cached seeds before LRU eviction")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: tiny graph, short stream")
+    # --- serving-tier knobs (docs/SERVING.md) ---
+    ap.add_argument("--qps", type=float, default=None,
+                    help="open-loop offered load (Poisson arrivals); "
+                         "omit for the closed-loop saturating drain")
+    ap.add_argument("--deadline-ms", type=float, default=250.0,
+                    help="per-request latency SLO; the batcher dispatches "
+                         "partial batches rather than miss the head's")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded-queue capacity (default 4x batch); "
+                         "offers beyond it are shed with a typed Overload")
+    ap.add_argument("--policy", default="none",
+                    choices=["none", "throttle", "degrade", "full"],
+                    help="overload protection stack (see module docstring)")
+    ap.add_argument("--rate-limit", type=float, default=None,
+                    help="token-bucket sustained qps for --policy "
+                         "throttle/full (default: calibrated capacity)")
+    ap.add_argument("--sim", action="store_true",
+                    help="virtual clock + modeled batch cost: deterministic "
+                         "queueing dynamics, no wall-clock sleeps")
+    ap.add_argument("--expect-shed", action="store_true",
+                    help="exit 1 unless the run shed at least one request "
+                         "(the CI overload smoke assertion)")
     args = ap.parse_args(argv)
     if args.smoke:  # shrink whatever the user did not set explicitly
         if args.scale == 0.02:
@@ -97,6 +102,12 @@ def main(argv=None) -> int:
             args.batch = 8
     if args.queries < 1 or args.batch < 1:
         ap.error("--queries and --batch must be >= 1")
+    if args.queue_cap is None:
+        args.queue_cap = 4 * args.batch
+    if args.queue_cap < 1:
+        ap.error("--queue-cap must be >= 1")
+    if args.qps is not None and args.qps <= 0:
+        ap.error("--qps must be > 0 (omit it for the closed loop)")
 
     jax.config.update("jax_enable_x64", True)
     import numpy as np
@@ -104,6 +115,9 @@ def main(argv=None) -> int:
     from ..core import (BatchConfig, CachePolicy, EnginePlan, PageRankEngine,
                         TopKQuery)
     from ..graph import paper_dataset
+    from ..serve import (AdmissionPolicy, ClosedLoopWorkload, DegradePolicy,
+                         OpenLoopWorkload, PPRService, ServiceConfig,
+                         VirtualClock)
 
     mesh = None
     if args.mesh is not None:
@@ -135,64 +149,95 @@ def main(argv=None) -> int:
 
     cfg = BatchConfig(batch_method=args.method, c=args.c, xi=args.xi,
                       tol=args.xi)
-    rng = np.random.default_rng(args.seed)
-    seeds = zipf_seeds(g, args.queries, args.zipf, rng)
     B = max(1, min(args.batch, args.queries))
+    deadline_s = args.deadline_ms / 1e3
 
     # report the planner's decision for the micro-batch shape we will serve
-    print(engine.plan(TopKQuery(sources=seeds[:B], k=args.topk,
+    probe = np.zeros(B, dtype=np.int64)
+    print(engine.plan(TopKQuery(sources=probe, k=args.topk,
                                 cfg=cfg)).explain())
 
-    # 2. warmup — compile the [B, n] pass outside the measured window
-    t0 = time.perf_counter()
-    engine.run(TopKQuery(sources=seeds[:B], k=args.topk, cfg=cfg))
-    t_compile = time.perf_counter() - t0
+    # 2. assemble the tier: admission + queue + batcher + degrade ladder
+    throttling = args.policy in ("throttle", "full")
+    degrading = args.policy in ("degrade", "full")
+    svc_cfg = ServiceConfig(
+        batch_size=B, k=args.topk, queue_cap=args.queue_cap,
+        admission=AdmissionPolicy(rate_qps=None, burst=float(B),
+                                  cache_bypass=args.cache),
+        degrade=(DegradePolicy(hi=max(2, (3 * args.queue_cap) // 4),
+                               lo=max(1, args.queue_cap // 4))
+                 if degrading else None),
+        cfg=cfg,
+        time_source="model" if args.sim else "wall",
+    )
+    clock = VirtualClock() if args.sim else None
+    service = PPRService(engine, svc_cfg, clock=clock)
 
-    # 3. serve — drain the stream in fixed-shape micro-batches
-    lat, n_reals, answered = [], [], 0
-    sample = None
-    t_serve0 = time.perf_counter()
-    for lo in range(0, args.queries, B):
-        req = seeds[lo:lo + B]
-        n_real = len(req)
-        if n_real < B:  # pad the tail to the compiled shape
-            req = np.concatenate([req, np.full(B - n_real, req[-1])])
-        t1 = time.perf_counter()
-        tk = engine.run(TopKQuery(sources=req, k=args.topk, cfg=cfg)).result
-        jax.block_until_ready(tk.scores)
-        lat.append(time.perf_counter() - t1)
-        n_reals.append(n_real)
-        answered += n_real
-        if sample is None:
-            sample = (int(req[0]), np.asarray(tk.indices[0]),
-                      np.asarray(tk.scores[0]))
-    t_serve = time.perf_counter() - t_serve0
+    # 3. warmup + calibration — compile the [B, n] pass outside the
+    #    measured window and seed the cost model from its wall time
+    cal = service.calibrate()
+    capacity_qps = B / max(cal["warm_batch_s"], 1e-9)
+    print(f"warmup: {cal['warm_batch_s']*1e3:.1f} ms/batch "
+          f"({cal['cost_units']:.0f} cost units, "
+          f"capacity ≈ {capacity_qps:.0f} q/s)")
+    if throttling:
+        # the bucket's sustained rate defaults to what one engine can
+        # actually serve — known only after calibration, so wire it here
+        from ..serve import AdmissionController
+        rate = args.rate_limit if args.rate_limit else capacity_qps
+        service.admission = AdmissionController(
+            AdmissionPolicy(rate_qps=rate, burst=float(B),
+                            cache_bypass=args.cache), engine)
+        print(f"throttle: token bucket {rate:.0f} q/s, burst {B}")
 
-    # 4. report
-    lat_ms = np.asarray(lat) * 1e3
-    n_reals = np.asarray(n_reals)
-    # per-query latency attributes each batch's wall time to the REAL
-    # queries it answered: the padded tail batch costs the same device
-    # pass as a full one, so dividing by B there understated its queries'
-    # latency — weight each batch's per-query figure by n_real instead.
-    per_q_ms = np.repeat(lat_ms / n_reals, n_reals)
-    qps = answered / t_serve
-    print(f"served {answered} queries in {len(lat)} micro-batches of {B} "
-          f"(method={args.method}, step_impl={engine.step_impl}, "
-          f"mesh={mesh_eff}, zipf={args.zipf})")
-    print(f"compile: {t_compile*1e3:.1f} ms   batch p50/p99: "
-          f"{np.percentile(lat_ms, 50):.1f}/{np.percentile(lat_ms, 99):.1f} ms"
-          f"   per-query p50: {np.percentile(per_q_ms, 50):.2f} ms   "
-          f"throughput: {qps:.1f} q/s")
+    # 4. the stream
+    if args.qps is None:
+        workload = ClosedLoopWorkload(g, clients=B, n_queries=args.queries,
+                                      zipf=args.zipf, seed=args.seed,
+                                      deadline_s=deadline_s, k=args.topk)
+        shape = f"closed-loop x{B} clients"
+    else:
+        workload = OpenLoopWorkload(g, qps=args.qps, n_queries=args.queries,
+                                    zipf=args.zipf, seed=args.seed,
+                                    deadline_s=deadline_s, k=args.topk)
+        shape = f"open-loop {args.qps:g} q/s offered"
+
+    # 5. serve + report
+    report = service.serve(workload)
+    s = report.summary()
+    lat = s["latency"]
+    print(f"served {s['served']}/{s['offered']} queries in {s['batches']} "
+          f"micro-batches of {B} ({shape}, method={args.method}, "
+          f"step_impl={engine.step_impl}, mesh={mesh_eff}, "
+          f"zipf={args.zipf}, policy={args.policy})")
+    print(f"latency p50/p99: {lat['p50_ms']:.1f}/{lat['p99_ms']:.1f} ms   "
+          f"deadline({args.deadline_ms:.0f} ms) miss: "
+          f"{s['deadline_miss_frac']*100:.1f}%   "
+          f"throughput: {s['qps']:.1f} q/s")
+    print(f"overload: shed={s['shed']} ({s['shed_frac']*100:.1f}%) "
+          f"[throttled={s['admission']['throttled']} "
+          f"queue_full={s['queue']['rejected']}]   "
+          f"degraded={s['degraded_frac']*100:.1f}%   "
+          f"max_depth={s['queue']['max_depth']}/{s['queue']['capacity']}   "
+          f"dispatch={s['batcher']}")
+    if report.degrade_stats is not None:
+        print(f"degrade: {report.degrade_stats}")
     if engine.result_cache is not None:
-        s = engine.result_cache.stats()
-        print(f"cache: hit_rate={s['hit_rate']:.2f} hits={s['hits']} "
-              f"misses={s['misses']} revalidated={s['revalidated']} "
-              f"entries={s['entries']} evictions={s['evictions']} "
+        cs = engine.result_cache.stats()
+        print(f"cache: hit_rate={cs['hit_rate']:.2f} hits={cs['hits']} "
+              f"misses={cs['misses']} revalidated={cs['revalidated']} "
+              f"entries={cs['entries']} evictions={cs['evictions']} "
+              f"bypassed_queue={s['admission']['bypassed']} "
               f"(graph_version={engine.graph_version})")
-    src_v, idx, sc = sample
-    print(f"sample answer — seed {src_v}: "
-          f"{[(int(i), float(s)) for i, s in zip(idx, sc)]}")
+    sample = next((x for x in report.served if x.indices is not None), None)
+    if sample is not None:
+        pairs = [(int(i), float(v))
+                 for i, v in zip(sample.indices, sample.scores)]
+        print(f"sample answer — seed {sample.req.seed}: {pairs}")
+    if args.expect_shed and s["shed"] == 0:
+        print("FAIL: --expect-shed but no requests were shed "
+              "(overload protection never engaged)")
+        return 1
     return 0
 
 

@@ -1,0 +1,123 @@
+"""Admission control — token-bucket throttling + cache-aware bypass.
+
+Two gates run before a request may occupy queue space:
+
+  * **token bucket** — sustained rate ``rate_qps`` with burst headroom
+    ``burst``; a request that finds no token is rejected with a typed
+    ``Overload(reason="throttled")`` and a ``retry_after_s`` hint.
+    Throttling *before* the queue keeps the queue's bound meaning "work
+    in progress", not "work plus the backlog we should have refused".
+  * **cache-aware admission** — when the engine carries a result cache
+    (``core/cache.py``) and the request's seed is *fresh* in it, the
+    request bypasses the queue and batcher entirely: a cache hit costs
+    no device pass, so making it wait behind queued solves (or spend a
+    token) would invert the whole point of caching.  This is the PR 6
+    follow-up the cache left to the serving tier.
+
+The bucket is clock-agnostic: refill is computed from the timestamps the
+caller passes, so the same arithmetic runs under the virtual clock in
+tests and the wall clock in serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .queue import Overload
+from .workload import Request
+
+__all__ = ["TokenBucket", "AdmissionPolicy", "AdmissionController"]
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s, at most ``burst`` stored."""
+
+    def __init__(self, rate: float, burst: float):
+        if float(rate) <= 0:
+            raise ValueError(f"rate must be > 0 tokens/s, got {rate!r}")
+        if float(burst) < 1:
+            raise ValueError(f"burst must be >= 1 token, got {burst!r}")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._tokens = float(burst)  # start full: bursts at t=0 admit
+        self._t_last = None
+
+    def _refill(self, now: float) -> None:
+        if self._t_last is not None and now > self._t_last:
+            self._tokens = min(self.burst, self._tokens + (now - self._t_last) * self.rate)
+        self._t_last = now if self._t_last is None else max(self._t_last, now)
+
+    def tokens(self, now: float) -> float:
+        self._refill(now)
+        return self._tokens
+
+    def try_acquire(self, now: float, n: float = 1.0) -> bool:
+        self._refill(now)
+        if self._tokens >= float(n):
+            self._tokens -= float(n)
+            return True
+        return False
+
+    def retry_after(self, now: float, n: float = 1.0) -> float:
+        """Seconds until ``n`` tokens will have accumulated."""
+        self._refill(now)
+        deficit = float(n) - self._tokens
+        return max(0.0, deficit / self.rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Static description of the admission stage.
+
+    ``rate_qps=None`` disables throttling (every request proceeds to the
+    queue); ``burst`` defaults to one micro-batch worth when the service
+    wires it.  ``cache_bypass`` enables the fresh-cache-entry fast path.
+    """
+
+    rate_qps: Optional[float] = None
+    burst: float = 16.0
+    cache_bypass: bool = True
+
+
+class AdmissionController:
+    """Applies an :class:`AdmissionPolicy` to one request at a time.
+
+    ``admit`` returns one of
+      * ``"enqueue"`` — proceed to the bounded queue;
+      * ``"bypass"``  — serve immediately off the result cache;
+      * an :class:`~repro.serve.queue.Overload` — throttled, not admitted.
+    """
+
+    def __init__(self, policy: AdmissionPolicy, engine=None):
+        self.policy = policy
+        self.engine = engine
+        self.bucket = None
+        if policy.rate_qps is not None:
+            self.bucket = TokenBucket(policy.rate_qps, policy.burst)
+        self.throttled = 0
+        self.bypassed = 0
+        self.admitted = 0
+
+    def _cache_fresh(self, seed: int, cfg) -> bool:
+        eng = self.engine
+        if eng is None or getattr(eng, "result_cache", None) is None:
+            return False
+        return eng.result_cache.peek(seed, cfg, eng.graph_version)
+
+    def admit(self, req: Request, now: float, cfg=None):
+        if self.policy.cache_bypass and self._cache_fresh(req.seed, cfg):
+            # a fresh cached answer costs no device pass: serving it now
+            # neither consumes a token nor competes for queue space.
+            self.bypassed += 1
+            return "bypass"
+        if self.bucket is not None and not self.bucket.try_acquire(now):
+            self.throttled += 1
+            return Overload(
+                req=req, reason="throttled", t=now, retry_after_s=self.bucket.retry_after(now)
+            )
+        self.admitted += 1
+        return "enqueue"
+
+    def stats(self) -> dict:
+        return dict(admitted=self.admitted, bypassed=self.bypassed, throttled=self.throttled)

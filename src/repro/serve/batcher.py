@@ -1,0 +1,129 @@
+"""Deadline-aware batch formation — trade batch fill against p99.
+
+A fixed-shape micro-batcher wants full batches (the whole edge stream is
+read once per round for all B rows), but a latency SLO wants requests
+dispatched before their deadlines.  The paper's uniform-convergence
+property is what makes the trade *plannable*: ITA batch cost is
+predictable per configuration, so the batcher can hold a partial batch
+exactly until the moment the oldest request's deadline minus the
+predicted batch duration says "dispatch now or miss".
+
+The prediction chains the planner to the clock: ``engine.plan(query)``
+estimates cost in edge-traversal units, and :class:`CostModel` carries
+the measured seconds-per-unit calibration (EWMA-updated from observed
+batch wall times in wall-clock serving; fixed in simulation, where it
+*is* the service-time model).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from .queue import BoundedQueue
+
+__all__ = ["CostModel", "DeadlineBatcher"]
+
+
+class CostModel:
+    """Seconds-per-edge-traversal-unit calibration for plan costs.
+
+    ``predict(units) = base_s + seconds_per_unit * units``.  ``observe``
+    folds a measured ``(units, seconds)`` sample in with an EWMA, so a
+    wall-clock service self-calibrates after the first few batches while
+    a simulated service keeps the fixed model that makes it
+    deterministic.
+    """
+
+    def __init__(self, seconds_per_unit: float, base_s: float = 0.0, ewma: float = 0.3):
+        if float(seconds_per_unit) <= 0:
+            raise ValueError(f"seconds_per_unit must be > 0, got {seconds_per_unit!r}")
+        if not 0.0 <= float(ewma) <= 1.0:
+            raise ValueError(f"ewma must be in [0, 1], got {ewma!r}")
+        self.seconds_per_unit = float(seconds_per_unit)
+        self.base_s = float(base_s)
+        self.ewma = float(ewma)
+        self.samples = 0
+
+    def predict(self, cost_units: float) -> float:
+        return self.base_s + self.seconds_per_unit * float(cost_units)
+
+    def observe(self, cost_units: float, seconds: float) -> None:
+        if cost_units <= 0 or seconds <= 0 or self.ewma == 0.0:
+            return
+        spu = (float(seconds) - self.base_s) / float(cost_units)
+        if spu <= 0:
+            return
+        a = self.ewma
+        self.seconds_per_unit = (1 - a) * self.seconds_per_unit + a * spu
+        self.samples += 1
+
+
+class DeadlineBatcher:
+    """Decides *when* a queue's head becomes a micro-batch.
+
+    Dispatch fires when either
+      * the queue holds a full batch (``batch_size``), or
+      * the oldest request's deadline, minus the predicted duration of a
+        batch at the current depth, minus a safety margin, is now —
+        i.e. waiting any longer for more fill would miss the head's SLO.
+
+    ``trigger_time`` exposes the second condition as an absolute time so
+    the event loop can sleep exactly until it (no polling).
+    """
+
+    def __init__(
+        self,
+        batch_size: int,
+        cost_model: CostModel,
+        batch_cost_units: float,
+        safety_s: float = 0.0,
+    ):
+        if int(batch_size) < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.batch_size = int(batch_size)
+        self.cost_model = cost_model
+        # planner estimate for one full [B, n] micro-batch (plan.cost);
+        # a partial batch pads to the compiled shape, so its predicted
+        # duration is the full batch's — exactly the padded-tail cost
+        # accounting the metrics module insists on.
+        self.batch_cost_units = float(batch_cost_units)
+        self.safety_s = float(safety_s)
+        self.dispatched_full = 0
+        self.dispatched_deadline = 0
+        self.dispatched_flush = 0
+
+    def predicted_batch_s(self) -> float:
+        return self.cost_model.predict(self.batch_cost_units)
+
+    def trigger_time(self, queue: BoundedQueue) -> float:
+        """Absolute time at which the head's deadline forces dispatch."""
+        head = queue.oldest()
+        if head is None:
+            return float("inf")
+        return head.deadline - self.predicted_batch_s() - self.safety_s
+
+    def should_dispatch(
+        self, queue: BoundedQueue, now: float, flush: bool = False
+    ) -> Optional[str]:
+        """``"full"`` / ``"deadline"`` / ``"flush"`` / ``None`` (wait)."""
+        if queue.depth == 0:
+            return None
+        if queue.depth >= self.batch_size:
+            self.dispatched_full += 1
+            return "full"
+        if now >= self.trigger_time(queue):
+            self.dispatched_deadline += 1
+            return "deadline"
+        if flush:
+            # no future arrivals can ever fill this batch — drain it
+            self.dispatched_flush += 1
+            return "flush"
+        return None
+
+    def stats(self) -> dict:
+        return dict(
+            full=self.dispatched_full,
+            deadline=self.dispatched_deadline,
+            flush=self.dispatched_flush,
+            predicted_batch_s=self.predicted_batch_s(),
+        )

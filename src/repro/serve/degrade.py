@@ -1,0 +1,143 @@
+"""Graceful degradation — step down fidelity under sustained queue growth.
+
+The fallback ladder: when the bounded queue stays deep (overload the
+token bucket and shedding haven't absorbed), the service steps down to a
+cheaper serving configuration — a looser ITA tolerance ξ (fewer rounds
+per batch, answers still within the advertised bound) and/or a cheaper
+backend picked through the PR 4 capability/cost machinery — and steps
+back up when the queue drains.  Every answer produced at a degraded
+level is tagged ``degraded=True`` in its ``ResultEnvelope``: clients can
+tell a best-effort answer from a full-fidelity one.
+
+The transition rule is **hysteretic**: moving down requires the depth
+signal to sit above the high watermark for ``patience_down`` consecutive
+observations, moving up requires it below the low watermark for
+``patience_up`` — two watermarks plus patience is what keeps a square-
+wave load from flapping the policy once per batch (the property test in
+tests/test_serving.py drives exactly that wave).
+
+State machine (one state per ladder level)::
+
+     level 0 (full fidelity)
+       │  depth ≥ hi for patience_down observations
+       ▼
+     level 1 (ξ × xi_scale₁)   ──┐ same rule, next rung
+       ▲                         ▼
+       │  depth ≤ lo for      level 2 ...
+       │  patience_up
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+__all__ = ["DegradeLevel", "DegradePolicy", "default_ladder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeLevel:
+    """One rung of the fallback ladder.
+
+    ``xi_scale`` multiplies the serving config's ξ (1.0 = untouched);
+    ``step_impl`` optionally names a cheaper backend to serve this rung
+    on (the service prepares a fallback engine for it via the capability
+    registry); ``name`` is what reports and envelopes carry.
+    """
+
+    name: str = "full"
+    xi_scale: float = 1.0
+    step_impl: Optional[str] = None
+
+    def __post_init__(self):
+        if float(self.xi_scale) < 1.0:
+            raise ValueError(
+                f"xi_scale must be >= 1.0 (degrading means LOOSER ξ), got {self.xi_scale!r}"
+            )
+
+
+def default_ladder() -> Tuple[DegradeLevel, ...]:
+    """Full fidelity, then two looser-ξ rungs (1e2, 1e4)."""
+    return (
+        DegradeLevel(name="full"),
+        DegradeLevel(name="xi*1e2", xi_scale=1e2),
+        DegradeLevel(name="xi*1e4", xi_scale=1e4),
+    )
+
+
+class DegradePolicy:
+    """Hysteretic level selection from the queue-depth signal.
+
+    ``observe(depth)`` is called once per dispatch decision and returns
+    the level index to serve the next batch at.  ``hi``/``lo`` are depth
+    watermarks (requests); ``patience_down``/``patience_up`` the number
+    of *consecutive* observations beyond the watermark required to move.
+    A single observation inside the dead band ``(lo, hi)`` resets both
+    streaks — the hysteresis that prevents flapping.
+    """
+
+    def __init__(
+        self,
+        levels: Optional[Sequence[DegradeLevel]] = None,
+        *,
+        hi: int = 24,
+        lo: int = 4,
+        patience_down: int = 3,
+        patience_up: int = 6,
+    ):
+        if levels is None:
+            levels = default_ladder()
+        self.levels: Tuple[DegradeLevel, ...] = tuple(levels)
+        if not self.levels:
+            raise ValueError("need at least one DegradeLevel (full fidelity)")
+        if self.levels[0].xi_scale != 1.0 or self.levels[0].step_impl:
+            raise ValueError(
+                "levels[0] must be the full-fidelity level (xi_scale=1.0, no backend override)"
+            )
+        if int(lo) >= int(hi):
+            raise ValueError(f"watermarks must satisfy lo < hi, got lo={lo}, hi={hi}")
+        if int(patience_down) < 1 or int(patience_up) < 1:
+            raise ValueError("patience counts must be >= 1")
+        self.hi, self.lo = int(hi), int(lo)
+        self.patience_down = int(patience_down)
+        self.patience_up = int(patience_up)
+        self.level = 0
+        self._over = 0  # consecutive observations at/above hi
+        self._under = 0  # consecutive observations at/below lo
+        self.transitions: list = []  # (obs_index, from_level, to_level)
+        self._obs = 0
+
+    @property
+    def current(self) -> DegradeLevel:
+        return self.levels[self.level]
+
+    def observe(self, depth: int) -> int:
+        """Fold one queue-depth observation; return the serving level."""
+        self._obs += 1
+        depth = int(depth)
+        if depth >= self.hi:
+            self._over += 1
+            self._under = 0
+        elif depth <= self.lo:
+            self._under += 1
+            self._over = 0
+        else:  # dead band: hold state, reset both streaks
+            self._over = 0
+            self._under = 0
+        if self._over >= self.patience_down and self.level + 1 < len(self.levels):
+            self.transitions.append((self._obs, self.level, self.level + 1))
+            self.level += 1
+            self._over = 0
+        elif self._under >= self.patience_up and self.level > 0:
+            self.transitions.append((self._obs, self.level, self.level - 1))
+            self.level -= 1
+            self._under = 0
+        return self.level
+
+    def stats(self) -> dict:
+        return dict(
+            level=self.level,
+            name=self.current.name,
+            transitions=len(self.transitions),
+            observations=self._obs,
+        )

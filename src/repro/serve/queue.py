@@ -1,0 +1,91 @@
+"""Bounded FIFO — queue-based load leveling between arrivals and batches.
+
+The load-leveling pattern: a queue absorbs arrival bursts so the engine
+sees steady fixed-shape micro-batches, and a *bound* on that queue is
+what converts sustained overload into fast, explicit rejections instead
+of unbounded latency.  ``offer`` on a full queue returns a typed
+:class:`Overload` (never an exception, never a silent drop) carrying the
+queue state the client would need to back off sensibly; depth/age
+counters feed the degrade policy and the serving report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+from .workload import Request
+
+__all__ = ["BoundedQueue", "Overload"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Overload:
+    """Typed rejection: the service explicitly refused this request.
+
+    ``reason`` is ``"queue_full"`` (bounded-FIFO load leveling) or
+    ``"throttled"`` (token-bucket admission).  ``retry_after_s`` is the
+    service's estimate of when capacity frees up — the Retry-After
+    header of the pattern.
+    """
+
+    req: Request
+    reason: str
+    t: float
+    retry_after_s: float = 0.0
+    depth: int = 0
+
+
+class BoundedQueue:
+    """FIFO with a hard capacity; rejects-on-full with :class:`Overload`.
+
+    Not thread-safe by design — the serving loop is a single-threaded
+    discrete-event loop (virtual or wall clock), which is what makes
+    every policy deterministic under test.
+    """
+
+    def __init__(self, capacity: int):
+        if int(capacity) < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._q: deque = deque()
+        # counters for the serving report / degrade signal
+        self.enqueued = 0
+        self.rejected = 0
+        self.max_depth = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def offer(self, req: Request, now: float, retry_after_s: float = 0.0) -> Optional[Overload]:
+        """Enqueue ``req``; on a full queue return an :class:`Overload`
+        (reason ``"queue_full"``) and enqueue nothing."""
+        if len(self._q) >= self.capacity:
+            self.rejected += 1
+            depth = len(self._q)
+            return Overload(
+                req=req, reason="queue_full", t=now, retry_after_s=retry_after_s, depth=depth
+            )
+        self._q.append(req)
+        self.enqueued += 1
+        self.max_depth = max(self.max_depth, len(self._q))
+        return None
+
+    def oldest(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+    def oldest_age(self, now: float) -> float:
+        """Seconds the head request has waited (0.0 when empty)."""
+        return now - self._q[0].t_arrival if self._q else 0.0
+
+    def pop_batch(self, max_size: int) -> List[Request]:
+        """Dequeue up to ``max_size`` requests in FIFO order."""
+        out = []
+        while self._q and len(out) < int(max_size):
+            out.append(self._q.popleft())
+        return out
