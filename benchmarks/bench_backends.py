@@ -36,6 +36,15 @@ Three questions this answers on any hardware:
      record is the agreement (``within_tol``) + overhead baseline —
      interpret-mode Pallas wall-clock on a host mesh is a correctness
      harness, not a speed claim.
+  7. Planner cost provenance — the same graph planned against an empty
+     roofline cost table (declared-constants fallback) and against a
+     table with a measured sample per backend (measured re-ranking);
+     ``--planner-costs-json PATH`` records the two decisions, their
+     agreement, and the ``plan.explain()`` provenance booleans
+     (``benchmarks/BENCH_planner_costs.json`` is the committed entry).
+     Everything in the record derives from deterministic HLO lowerings
+     priced by ``repro.roofline.hw``, so the booleans are exact per
+     platform — see docs/ROOFLINE.md.
 
 Committed ``BENCH_*.json`` baselines are schema-checked in CI by
 ``benchmarks/check_bench_schema.py``, and the CI ``bench-drift`` job
@@ -313,6 +322,90 @@ def run_query_plan(B: int = 16, *, n: int = 20_000, m: int = 160_000,
         note="run side = plan + envelope around the identical prepared-ctx "
              "compute; best-of-3 wall times, CPU caveats from "
              "benchmarks/common.py apply",
+    )
+
+
+def run_planner_costs(B: int = 8, *, n: int = 4_000, m: int = 24_000,
+                      xi: float = 1e-10, seed: int = 7) -> dict:
+    """Measured-vs-declared planner decisions + explain() provenance.
+
+    Two passes over the same graph: first the planner decides with an
+    EMPTY cost table pinned (the declared-constants fallback every fresh
+    checkout runs on), then with a table holding a ``measure_step`` sample
+    for every registered backend (full coverage, so ``choose_backend``
+    re-ranks by measured roofline seconds).  The record captures both
+    decisions, whether they agree, and the provenance strings each
+    ``plan.explain()`` must quote — these are deterministic lowerings
+    priced by the roofline model, not wall-clock, so every boolean is
+    reproducible on a given platform.  Defaults ARE the smoke sizes.
+    """
+    from repro.core import RankQuery
+    from repro.core.backends import choose_backend
+    from repro.roofline import CostTable, measure_step, set_cost_table
+    from repro.roofline.planner_costs import plan_cost
+
+    g = web_graph(n, m, dangling_frac=0.15, seed=seed)
+    stats = dict(n=g.n, m=g.m, dtype="float64")
+    cfg = ItaConfig(xi=xi)
+    q = RankQuery(cfg)
+    try:
+        # declared pass: empty table pinned -> the fallback path, exercised
+        set_cost_table(CostTable())
+        decl_name, decl_reason = choose_backend(stats)
+        decl_plan = PageRankEngine(g, EnginePlan(step_impl="auto")).plan(q)
+        decl_text = decl_plan.explain()
+        pc_decl = plan_cost(decl_name, stats, cfg)
+
+        # measured pass: one sample per registered backend = full coverage
+        table = CostTable()
+        samples = {name: measure_step(name, g, dtype="float64")
+                   for name in ("dense", "ell", "frontier")}
+        for s in samples.values():
+            table.add(s)
+        set_cost_table(table)
+        meas_name, meas_reason = choose_backend(stats)
+        meas_plan = PageRankEngine(g, EnginePlan(step_impl="auto")).plan(q)
+        meas_text = meas_plan.explain()
+        pc_meas = plan_cost(decl_name, stats, cfg)
+        pc_meas_b = plan_cost(decl_name, stats, cfg, batch=B)
+    finally:
+        set_cost_table(None)
+
+    return dict(
+        bench="planner_costs",
+        graph=dict(n=g.n, m=g.m),
+        batch=B,
+        xi=xi,
+        platform=jax.default_backend(),
+        decision_declared=decl_name,
+        decision_measured=meas_name,
+        decision_agreement=bool(decl_name == meas_name),
+        declared_reason_ok=bool(
+            "lowest est. cost among eligible backends" in decl_reason),
+        measured_reason_ok=bool(
+            "lowest measured roofline cost" in meas_reason
+            and "cost source: measured" in meas_reason),
+        declared_provenance=bool(
+            "cost source: declared" in decl_text
+            and "declared backend cost constants" in decl_text),
+        measured_provenance=bool(
+            "cost source: measured" in meas_text
+            and "measured roofline sample" in meas_text),
+        # plan.cost must stay in declared edge-traversal units whatever the
+        # source (the serving CostModel calibrates against those units)
+        cost_units_stable=bool(
+            pc_meas.source == "measured" and pc_meas.cost == pc_decl.cost
+            and pc_meas_b.cost == B * pc_decl.cost),
+        dense_seconds=float(samples["dense"].seconds),
+        ell_seconds=float(samples["ell"].seconds),
+        frontier_seconds=float(samples["frontier"].seconds),
+        dense_bytes=float(samples["dense"].bytes_accessed),
+        ell_bytes=float(samples["ell"].bytes_accessed),
+        plan=meas_text.splitlines()[0],
+        note="decisions + provenance from deterministic HLO lowerings "
+             "priced by roofline/hw.py, not wall-clock; *_seconds are "
+             "modeled seconds per push round on this platform; defaults "
+             "are the smoke sizes so CI re-runs the committed shape",
     )
 
 
@@ -597,6 +690,10 @@ if __name__ == "__main__":
                     help="write the run_serving_cache() cached-vs-uncached "
                          "Zipf-stream comparison to PATH instead of the "
                          "row matrix")
+    ap.add_argument("--planner-costs-json", default=None, metavar="PATH",
+                    help="write the run_planner_costs() measured-vs-"
+                         "declared planner decision + provenance record "
+                         "to PATH instead of the row matrix")
     ap.add_argument("--serving-json", default=None, metavar="PATH",
                     help="write the run_serving() offered-load vs latency "
                          "sweep through the serving tier to PATH instead "
@@ -621,6 +718,9 @@ if __name__ == "__main__":
         if kw:
             kw["queries"] = 96  # defaults already smoke-sized; shorter stream
         _write_json(run_serving_cache(**kw), args.serving_cache_json)
+    elif args.planner_costs_json:
+        # defaults already are the smoke sizes (see its docstring)
+        _write_json(run_planner_costs(**kw), args.planner_costs_json)
     elif args.serving_json:
         if kw:
             kw["xi"] = 1e-8

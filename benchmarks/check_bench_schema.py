@@ -50,6 +50,13 @@ SCHEMAS: dict[str, tuple] = {
         "dense_sharded_us", "ell_sharded_us", "err_ell_vs_dense",
         "err_ell_vs_single", "within_tol", "iterations", "method", "note",
     ),
+    "planner_costs": (
+        "graph", "batch", "xi", "decision_declared", "decision_measured",
+        "decision_agreement", "declared_reason_ok", "measured_reason_ok",
+        "declared_provenance", "measured_provenance", "cost_units_stable",
+        "dense_seconds", "ell_seconds", "frontier_seconds", "dense_bytes",
+        "ell_bytes", "plan", "note",
+    ),
     "serving_cache": (
         "graph", "batch", "queries", "zipf", "k", "xi", "tol",
         "p50_cold_us", "p50_hot_us", "speedup_p50", "hit_rate",
@@ -73,6 +80,10 @@ _TYPES = {
     "bit_identical": bool, "within_2pct": bool, "within_tol": bool,
     "method": str, "note": str, "plan": str,
     "queries": int, "k": int, "cache": dict,
+    "decision_declared": str, "decision_measured": str,
+    "decision_agreement": bool, "declared_reason_ok": bool,
+    "measured_reason_ok": bool, "declared_provenance": bool,
+    "measured_provenance": bool, "cost_units_stable": bool,
     "loads": list, "queue_cap": int,
     "p99_bounded_at_sat": bool, "clean_below_saturation": bool,
     "overload_protected": bool,
@@ -98,6 +109,22 @@ DRIFT: dict[str, dict] = {
     "ell_sharded": dict(
         equal=("bench", "within_tol", "method"),
         ratio={},
+        absolute={},
+    ),
+    "planner_costs": dict(
+        # decisions and provenance derive from deterministic HLO
+        # lowerings priced by the roofline model (no wall-clock), so on a
+        # fixed platform every boolean and both decisions must hold
+        # exactly; the modeled per-round figures only move when XLA's
+        # lowering of the step changes — a real event worth flagging, but
+        # allow a generous band for compiler-version fusion differences.
+        equal=("bench", "decision_declared", "decision_measured",
+               "decision_agreement", "declared_reason_ok",
+               "measured_reason_ok", "declared_provenance",
+               "measured_provenance", "cost_units_stable"),
+        ratio={"dense_seconds": 4.0, "ell_seconds": 4.0,
+               "frontier_seconds": 4.0, "dense_bytes": 4.0,
+               "ell_bytes": 4.0},
         absolute={},
     ),
     "serving_cache": dict(

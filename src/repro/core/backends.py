@@ -235,10 +235,19 @@ def choose_backend(stats: Optional[dict] = None, cfg=None, *,
     flags every candidate must declare (e.g. ``("vertex_sharded_mesh",)``
     when the engine prepares an (R, C) mesh with C > 1), and ``stats`` may
     carry a ``"mesh"`` entry — the normalized (R, C) — that mesh-aware
-    cost models read.  This replaces the hard-coded platform switch: on
-    TPU the Mosaic ELL kernel's declared cost undercuts dense, elsewhere
-    the interpret-mode penalty keeps dense cheapest — same answers, but
-    now derived from declarations a new backend can participate in.
+    cost models read (plus ``"platform"`` / ``"dtype"`` overrides).  This
+    replaces the hard-coded platform switch: on TPU the Mosaic ELL
+    kernel's declared cost undercuts dense, elsewhere the interpret-mode
+    penalty keeps dense cheapest — same answers, but now derived from
+    declarations a new backend can participate in.
+
+    When the process-wide roofline cost table
+    (``repro.roofline.planner_costs``) holds a measured sample for EVERY
+    eligible candidate on the deciding platform, the measured estimated
+    seconds re-rank the pool and the reason names the measured source;
+    any coverage gap falls back to the declared constants (mixing
+    measured seconds with declared units would compare incommensurable
+    numbers).  See docs/ROOFLINE.md.
     """
     cands = []
     for name, b in STEP_IMPLS.items():
@@ -252,13 +261,31 @@ def choose_backend(stats: Optional[dict] = None, cfg=None, *,
         raise RuntimeError(
             "no eligible backend registered"
             + (f" (require={list(require)})" if require else ""))
+    platform = (stats or {}).get("platform") or jax.default_backend()
+    mesh = (stats or {}).get("mesh")
+    suffix = (f"platform={platform}"
+              + (f"; mesh={tuple(mesh)}" if mesh else "")
+              + (f"; require={list(require)}" if require else "") + ")")
+    measured = None
+    try:
+        from ..roofline.planner_costs import rank_measured
+        measured = rank_measured([n for _, _, n in cands], stats, cfg)
+    except Exception:
+        # the planner must keep planning on any roofline-layer failure —
+        # a broken/stale table degrades to the declared constants.
+        measured = None
+    if measured is not None:
+        m_cands = [(measured[n], 0 if n == "dense" else 1, n)
+                   for _, _, n in cands]
+        _, _, name = min(m_cands)
+        m_others = ", ".join(f"{n}~{s:.3g}s" for s, _, n in sorted(m_cands))
+        return name, (f"lowest measured roofline cost among eligible "
+                      f"backends ({m_others}; cost source: measured; "
+                      + suffix)
     cost, _, name = min(cands)
     others = ", ".join(f"{n}={c:.3g}" for c, _, n in sorted(cands))
-    mesh = (stats or {}).get("mesh")
     return name, (f"lowest est. cost among eligible backends ({others}; "
-                  f"platform={jax.default_backend()}"
-                  + (f"; mesh={tuple(mesh)}" if mesh else "")
-                  + (f"; require={list(require)}" if require else "") + ")")
+                  + suffix)
 
 
 def resolve_step_impl(name: Optional[str]) -> str:
@@ -323,7 +350,8 @@ class EllBackend(StepBackend):
         # is for rather than the interpreter that fakes it.
         mesh = (stats or {}).get("mesh")
         C = int(mesh[1]) if mesh is not None and len(tuple(mesh)) == 2 else 1
-        if C > 1 or jax.default_backend() == "tpu":
+        platform = (stats or {}).get("platform") or jax.default_backend()
+        if C > 1 or platform == "tpu":
             factor = 0.35
         else:
             factor = 50.0

@@ -59,6 +59,7 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from ..graph.structure import Graph, apply_edge_delta
@@ -194,7 +195,8 @@ class PageRankEngine:
                            if self._mesh_shape[1] > 1
                            else ("batch_parallel_mesh",))
             self.step_impl, self._backend_reason = choose_backend(
-                dict(n=g.n, m=g.m, mesh=self._mesh_shape), require=require)
+                dict(n=g.n, m=g.m, mesh=self._mesh_shape,
+                     dtype=np.dtype(plan.dtype).name), require=require)
         else:
             self.step_impl = resolve_step_impl(plan.step_impl)
             self._backend_reason = "explicit EnginePlan(step_impl=...) request"

@@ -163,6 +163,11 @@ class ExecutionPlan:
 
     ``cfg`` is the *resolved* config the execution will use (defaults
     filled in); ``reasons`` the why-chain ``explain()`` renders.
+    ``cost`` always stays in declared edge-traversal units (the serving
+    tier's pricing unit); ``cost_source``/``cost_detail`` record whether
+    a measured roofline sample (``repro.roofline.planner_costs``) or the
+    declared backend constants produced the estimate, with the measured
+    bytes/FLOPs/seconds provenance ``explain()`` quotes.
     """
 
     query: str                      # Query.kind
@@ -175,6 +180,8 @@ class ExecutionPlan:
     cfg: Any = None
     reasons: Tuple[str, ...] = ()
     sub_plans: Tuple["ExecutionPlan", ...] = ()
+    cost_source: str = "declared"   # "measured" | "declared"
+    cost_detail: Optional[dict] = None  # PlanCost.as_dict() provenance
 
     def explain(self) -> str:
         """Human-readable decision record: backend, mesh layout, why."""
@@ -188,6 +195,11 @@ class ExecutionPlan:
         lines = [head]
         if self.cost == self.cost:  # not NaN
             lines.append(f"  est. cost: {self.cost:.3g} edge-traversal units")
+            src = f"  cost source: {self.cost_source}"
+            reason = (self.cost_detail or {}).get("reason")
+            if reason:
+                src += f" — {reason}"
+            lines.append(src)
         if self.reasons:
             lines.append("  why:")
             lines.extend(f"  - {r}" for r in self.reasons)
@@ -254,6 +266,27 @@ class PlannerState:
     cache: Any = None               # CachePolicy when a result cache is on
 
 
+def _price(backend_name: str, stats: dict, cfg, batch: int = 1) -> dict:
+    """Price one planned solve through the roofline measured-cost layer.
+
+    Returns ``PlanCost.as_dict()`` — ``cost`` in declared edge-traversal
+    units × batch, ``source`` "measured"/"declared", and the provenance
+    ``reason`` ``ExecutionPlan.explain()`` quotes.  Planning must survive
+    a broken measured-cost layer, so any failure there degrades to the
+    declared constants instead of raising.
+    """
+    try:
+        from ..roofline.planner_costs import plan_cost
+        return plan_cost(backend_name, stats, cfg, batch=batch).as_dict()
+    except Exception:
+        from .backends import get_step_impl
+        cost = (get_step_impl(backend_name).cost(stats, cfg)
+                * max(1, int(batch)))
+        return dict(cost=cost, source="declared",
+                    reason="declared backend cost constants "
+                           "(measured-cost layer unavailable)")
+
+
 def _check_step_compat(state: PlannerState, cfg) -> None:
     want = getattr(cfg, "step_impl", None)
     if want not in (None, "auto", state.step_impl):
@@ -306,7 +339,8 @@ def _plan_rank(state: PlannerState, q: RankQuery) -> ExecutionPlan:
     reasons = [f"engine prepared step_impl={state.step_impl!r} "
                f"({state.backend_reason})",
                f"capabilities: {caps.summary()}"]
-    stats = dict(n=state.n, m=state.m)
+    stats = dict(n=state.n, m=state.m,
+                 dtype=np.dtype(getattr(cfg, "dtype", state.dtype)).name)
     if "step_impl" not in accepted_params(SOLVERS[method].fn):
         # solver consumes no push backend — runs as-is
         return ExecutionPlan(
@@ -321,18 +355,16 @@ def _plan_rank(state: PlannerState, q: RankQuery) -> ExecutionPlan:
         path = "host-loop"
         reasons.append("host-driven push -> python loop, identical step "
                        "semantics")
-    from .backends import get_step_impl
-    cost = get_step_impl(state.step_impl).cost(stats, cfg)
+    price = _price(state.step_impl, stats, cfg)
     return ExecutionPlan(query=q.kind, backend=state.step_impl, path=path,
-                         method=method, mesh=None, cfg=cfg, cost=cost,
-                         reasons=tuple(reasons))
+                         method=method, mesh=None, cfg=cfg,
+                         cost=price["cost"], cost_source=price["source"],
+                         cost_detail=price, reasons=tuple(reasons))
 
 
 def _plan_batch_common(state: PlannerState, cfg, B: int, kind: str
                        ) -> ExecutionPlan:
     """Shared PPR/TopK planning — the batch × mesh × backend matrix."""
-    from .backends import get_step_impl
-
     _check_step_compat(state, cfg)
     _check_dtype(state, cfg)
     if cfg.batch_method not in ("ita", "power"):
@@ -342,9 +374,9 @@ def _plan_batch_common(state: PlannerState, cfg, B: int, kind: str
     reasons = [f"engine prepared step_impl={state.step_impl!r} "
                f"({state.backend_reason})",
                f"capabilities: {caps.summary()}"]
-    stats = dict(n=state.n, m=state.m)
-    backend_obj = get_step_impl(state.step_impl)
-    cost = backend_obj.cost(stats, cfg)
+    stats = dict(n=state.n, m=state.m,
+                 dtype=np.dtype(getattr(cfg, "dtype", state.dtype)).name)
+    price = _price(state.step_impl, stats, cfg, batch=B)
     mesh = None
     if (state.mesh_shape is not None and cfg.shard_batch
             and cfg.batch_method == "ita" and caps.batch_parallel_mesh):
@@ -363,8 +395,9 @@ def _plan_batch_common(state: PlannerState, cfg, B: int, kind: str
             # sharded cost model: each device streams its m/C edge block
             # per round; mesh-aware backend costs (EllBackend) see the
             # grid via the "mesh" stats entry.
-            cost = backend_obj.cost(
-                dict(n=state.n, m=max(1, state.m // C), mesh=mesh), cfg)
+            price = _price(
+                state.step_impl,
+                dict(stats, m=max(1, state.m // C), mesh=mesh), cfg, batch=B)
             reasons.append(
                 f"sharded cost model: per-device edge block "
                 f"m/C ≈ {state.m // max(C, 1)} drives the estimate")
@@ -409,7 +442,8 @@ def _plan_batch_common(state: PlannerState, cfg, B: int, kind: str
                        "(π̄, h) state to revalidate — cache bypassed")
     return ExecutionPlan(query=kind, backend=state.step_impl, path=path,
                          method=f"{cfg.batch_method}_batch", mesh=mesh,
-                         micro_batch=B, cfg=cfg, cost=cost * max(B, 1),
+                         micro_batch=B, cfg=cfg, cost=price["cost"],
+                         cost_source=price["source"], cost_detail=price,
                          reasons=tuple(reasons))
 
 

@@ -15,8 +15,14 @@ import jax.numpy as jnp
 from ...sparse.ell import ELLGraph
 from .kernel import spmv_ell_bucket, spmv_ell_bucket_batch
 
-__all__ = ["spmv_ell", "spmv_ell_batch", "spmv_ell_cols_local_batch",
-           "ita_step_ell"]
+__all__ = ["DEFAULT_BLOCK_ROWS", "spmv_ell", "spmv_ell_batch",
+           "spmv_ell_cols_local_batch", "ita_step_ell"]
+
+
+# One tunable home for the kernel's row-tile size: tools/autotune_ell.py
+# sweeps candidates against the roofline model and reports whether this
+# default still wins for a given graph/platform.
+DEFAULT_BLOCK_ROWS = 256
 
 
 def _interpret_default() -> bool:
@@ -24,7 +30,7 @@ def _interpret_default() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def spmv_ell(ell: ELLGraph, w: jnp.ndarray, *, block_rows: int = 256,
+def spmv_ell(ell: ELLGraph, w: jnp.ndarray, *, block_rows: int = DEFAULT_BLOCK_ROWS,
              interpret: bool | None = None) -> jnp.ndarray:
     """y = (push of per-source scalar w) over all edges; shape [n] -> [n]."""
     if interpret is None:
@@ -43,7 +49,7 @@ def spmv_ell(ell: ELLGraph, w: jnp.ndarray, *, block_rows: int = 256,
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def spmv_ell_batch(ell: ELLGraph, W: jnp.ndarray, *, block_rows: int = 256,
+def spmv_ell_batch(ell: ELLGraph, W: jnp.ndarray, *, block_rows: int = DEFAULT_BLOCK_ROWS,
                    interpret: bool | None = None) -> jnp.ndarray:
     """Batched push: [B, n] operand rows through one edge-tile stream.
 
@@ -68,7 +74,7 @@ def spmv_ell_batch(ell: ELLGraph, W: jnp.ndarray, *, block_rows: int = 256,
 
 
 def spmv_ell_cols_local_batch(Wp, buckets, ovf_src, ovf_dst, n_pad: int, *,
-                              block_rows: int = 256,
+                              block_rows: int = DEFAULT_BLOCK_ROWS,
                               interpret: bool | None = None) -> jnp.ndarray:
     """One device's column-block batched push (the vertex-sharded layout).
 
@@ -109,7 +115,7 @@ def ita_step_ell(
     inv_deg: jnp.ndarray,
     non_dangling: jnp.ndarray,
     *,
-    block_rows: int = 256,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool | None = None,
 ):
     """One ITA round over the ELL layout — same contract as core.ita_step.

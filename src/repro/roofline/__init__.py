@@ -1,7 +1,38 @@
-"""Roofline analysis: hardware constants, HLO cost parsing, reporting."""
+"""Roofline analysis: hardware specs, HLO cost parsing, measured planner costs."""
+
 from .analysis import RooflineReport, analyze_compiled
 from .hlo_costs import HloCosts, parse_hlo_costs
-from .hw import HW, TPUv5e
+from .hw import HW, CPUHost, TPUv5e, spec_for_platform
+from .planner_costs import (
+    CostTable,
+    PlanCost,
+    StepCostSample,
+    get_cost_table,
+    measure_sharded_step,
+    measure_step,
+    plan_cost,
+    rank_measured,
+    roofline_seconds,
+    set_cost_table,
+)
 
-__all__ = ["HW", "HloCosts", "RooflineReport", "TPUv5e", "analyze_compiled",
-           "parse_hlo_costs"]
+__all__ = [
+    "HW",
+    "CPUHost",
+    "CostTable",
+    "HloCosts",
+    "PlanCost",
+    "RooflineReport",
+    "StepCostSample",
+    "TPUv5e",
+    "analyze_compiled",
+    "get_cost_table",
+    "measure_sharded_step",
+    "measure_step",
+    "parse_hlo_costs",
+    "plan_cost",
+    "rank_measured",
+    "roofline_seconds",
+    "set_cost_table",
+    "spec_for_platform",
+]

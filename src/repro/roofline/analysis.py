@@ -13,6 +13,7 @@ collective-permute op.  Ops inside ``while`` bodies (lax.scan over layers!)
 are multiplied by the trip count parsed from the loop condition when
 recognisable, else reported once and flagged.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -21,13 +22,35 @@ from typing import Optional
 
 from .hw import HW
 
-__all__ = ["RooflineReport", "collective_bytes_from_hlo", "analyze_compiled",
-           "dtype_bytes", "parse_shape_bytes"]
+__all__ = [
+    "RooflineReport",
+    "collective_bytes_from_hlo",
+    "analyze_compiled",
+    "dtype_bytes",
+    "parse_shape_bytes",
+]
 
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "token": 0,
+    "s4": 1,
+    "u4": 1,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
 }
 
 _COLLECTIVE_RE = re.compile(
@@ -69,14 +92,12 @@ def _while_trip_counts(hlo: str) -> dict[str, int]:
     constant-compare pattern in loop conditions.
     """
     counts: dict[str, int] = {}
-    for m in re.finditer(
-            r'while\([^)]*\).*?body=%?([\w.\-]+).*?known_trip_count=.?"?(\d+)',
-            hlo):
+    for m in re.finditer(r'while\([^)]*\).*?body=%?([\w.\-]+).*?known_trip_count=.?"?(\d+)', hlo):
         counts[m.group(1)] = int(m.group(2))
     # fallback: condition computations comparing iv < CONST
     for m in re.finditer(
-            r"%?([\w.\-]+)\s*\([^)]*\)\s*->\s*pred\[\]\s*{[^}]*?compare\([^)]*constant[^)]*\)",
-            hlo):
+        r"%?([\w.\-]+)\s*\([^)]*\)\s*->\s*pred\[\]\s*{[^}]*?compare\([^)]*constant[^)]*\)", hlo
+    ):
         pass  # shape-only fallback; trip count unknown -> handled by caller
     return counts
 
@@ -90,8 +111,9 @@ def collective_bytes_from_hlo(hlo: str) -> dict:
     """
     # split into computations: "%name (args) -> ... {" ... "}"
     comp_spans: dict[str, str] = {}
-    for m in re.finditer(r"^(?:ENTRY\s+)?%?([\w.\-]+)(?:\.\d+)?\s+\([^)]*\)\s*->.*?{",
-                         hlo, re.MULTILINE):
+    for m in re.finditer(
+        r"^(?:ENTRY\s+)?%?([\w.\-]+)(?:\.\d+)?\s+\([^)]*\)\s*->.*?{", hlo, re.MULTILINE
+    ):
         start = m.end()
         depth = 1
         i = start
@@ -120,8 +142,7 @@ def collective_bytes_from_hlo(hlo: str) -> dict:
             total += b * mult
             if mult > 1:
                 in_loop += b * mult
-    return dict(total_bytes=total, by_kind=by_kind, in_loop_bytes=in_loop,
-                loop_trip_counts=trip)
+    return dict(total_bytes=total, by_kind=by_kind, in_loop_bytes=in_loop, loop_trip_counts=trip)
 
 
 @dataclasses.dataclass
@@ -146,9 +167,16 @@ class RooflineReport:
         return dataclasses.asdict(self)
 
 
-def analyze_compiled(name: str, mesh_desc: str, chips: int, cost: dict,
-                     hlo_text: str, *, model_flops: Optional[float] = None,
-                     memory_stats: Optional[dict] = None) -> RooflineReport:
+def analyze_compiled(
+    name: str,
+    mesh_desc: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    *,
+    model_flops: Optional[float] = None,
+    memory_stats: Optional[dict] = None,
+) -> RooflineReport:
     """Loop-aware roofline from the optimized per-partition HLO.
 
     The SPMD module IS the per-device program, so all parsed counts are
@@ -168,14 +196,24 @@ def analyze_compiled(name: str, mesh_desc: str, chips: int, cost: dict,
     useful = (mf_dev / c.flops) if (mf_dev and c.flops) else None
     notes = ""
     if cost:
-        notes = (f"raw cost_analysis flops={cost.get('flops', 0):.3e} "
-                 f"(while bodies counted once; loop-adjusted used instead)")
+        notes = (
+            f"raw cost_analysis flops={cost.get('flops', 0):.3e} "
+            f"(while bodies counted once; loop-adjusted used instead)"
+        )
     return RooflineReport(
-        name=name, mesh=mesh_desc, chips=chips,
-        hlo_flops=c.flops, hlo_bytes=c.bytes_accessed,
-        collective_bytes=c.collective_bytes, by_kind=c.collective_by_kind,
-        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
-        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        name=name,
+        mesh=mesh_desc,
+        chips=chips,
+        hlo_flops=c.flops,
+        hlo_bytes=c.bytes_accessed,
+        collective_bytes=c.collective_bytes,
+        by_kind=c.collective_by_kind,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=useful,
         bytes_per_device=(memory_stats or {}).get("bytes_per_device"),
         notes=notes,
     )

@@ -21,6 +21,7 @@ the optimized HLO text with loop-trip multipliers:
 All counts are PER DEVICE (the HLO module is the per-partition program
 under SPMD), which is what the roofline terms want.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -30,16 +31,33 @@ from typing import Optional
 __all__ = ["HloCosts", "parse_hlo_costs"]
 
 _DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "token": 0,
 }
 
-_COMP_HEADER = re.compile(
-    r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.*)\{\s*$")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.*)\{\s*$")
 _OP_LINE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w]+\[[\d,]*\](?:\{[\d,]*\})?))\s*"
-    r"([\w\-]+)\((.*)$")
+    r"([\w\-]+)\((.*)$",
+)
 _SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
 _OPERAND = re.compile(r"%([\w.\-]+)")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
@@ -50,8 +68,7 @@ _TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
 _LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _LHS_BATCH = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -200,17 +217,29 @@ def parse_hlo_costs(hlo: str) -> HloCosts:
             out_n *= d
         return 2.0 * out_n * k
 
-    _SKIP = ("parameter", "constant", "get-tuple-element", "tuple", "bitcast",
-             "while", "conditional", "call", "after-all", "copy-start",
-             "copy-done", "iota", "partition-id", "replica-id")
+    _SKIP = (
+        "parameter",
+        "constant",
+        "get-tuple-element",
+        "tuple",
+        "bitcast",
+        "while",
+        "conditional",
+        "call",
+        "after-all",
+        "copy-start",
+        "copy-done",
+        "iota",
+        "partition-id",
+        "replica-id",
+    )
     # ops whose big operand is only *addressed*, not streamed in full
     _SLICY = ("dynamic-slice", "gather", "fusion")
 
     def op_bytes(op: _Op, comp_ops: dict) -> float:
         """Slice-aware byte estimate for one executed op."""
         ob = _shape_bytes(op.out_shape)
-        operands = [mm.group(1) for mm in
-                    _OPERAND.finditer(op.rest.split(")", 1)[0])]
+        operands = [mm.group(1) for mm in _OPERAND.finditer(op.rest.split(")", 1)[0])]
         if op.kind in ("dynamic-slice", "gather"):
             # reads ≈ output (the addressed slice) + indices
             return 2.0 * ob
@@ -235,8 +264,7 @@ def parse_hlo_costs(hlo: str) -> HloCosts:
                     param_order.append(bop.name)
             for bop in body:
                 if bop.kind in ("dynamic-slice", "gather"):
-                    ops_in = [m2.group(1) for m2 in
-                              _OPERAND.finditer(bop.rest.split(")", 1)[0])]
+                    ops_in = [m2.group(1) for m2 in _OPERAND.finditer(bop.rest.split(")", 1)[0])]
                     if ops_in and ops_in[0] in param_order:
                         sliced_params.add(ops_in[0])
             total = ob
@@ -247,8 +275,10 @@ def parse_hlo_costs(hlo: str) -> HloCosts:
                     sl = 0
                     for bop in body:
                         if bop.kind in ("dynamic-slice", "gather"):
-                            ops_in = [m2.group(1) for m2 in
-                                      _OPERAND.finditer(bop.rest.split(")", 1)[0])]
+                            ops_in = [
+                                m2.group(1)
+                                for m2 in _OPERAND.finditer(bop.rest.split(")", 1)[0])
+                            ]
                             if ops_in and ops_in[0] == param_order[i]:
                                 sl += _shape_bytes(bop.out_shape)
                     total += min(full, sl if sl else full)
@@ -277,8 +307,7 @@ def parse_hlo_costs(hlo: str) -> HloCosts:
             byts += op_bytes(op, comps) * m
             kind = op.kind.replace("-start", "")
             if kind in _COLLECTIVES:
-                operands = [mm.group(1) for mm in
-                            _OPERAND.finditer(op.rest.split(")", 1)[0])]
+                operands = [mm.group(1) for mm in _OPERAND.finditer(op.rest.split(")", 1)[0])]
                 ib = sum(_shape_bytes(shapes.get(o, "")) for o in operands)
                 cb = ib if ib else _shape_bytes(op.out_shape)
                 coll_bytes += cb * m
@@ -288,8 +317,12 @@ def parse_hlo_costs(hlo: str) -> HloCosts:
 
     loop_mults = {k: v for k, v in mult.items() if v > 1}
     return HloCosts(
-        flops=flops, bytes_accessed=byts, collective_bytes=coll_bytes,
-        collective_by_kind=coll_kind, n_collective_ops=n_coll,
-        loop_multipliers=loop_mults, flops_unscaled=flops_unscaled,
+        flops=flops,
+        bytes_accessed=byts,
+        collective_bytes=coll_bytes,
+        collective_by_kind=coll_kind,
+        n_collective_ops=n_coll,
+        loop_multipliers=loop_mults,
+        flops_unscaled=flops_unscaled,
         collective_msgs=coll_msgs,
     )

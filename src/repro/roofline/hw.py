@@ -1,16 +1,28 @@
-"""TPU v5e hardware constants (the dry-run's roofline denominators)."""
+"""Per-platform hardware specs — the roofline denominators.
+
+``TPUv5e`` is the dry-run's production target; ``CPUHost`` is a deliberately
+round model of the CI container (one NUMA-ish host with a loopback
+"interconnect" standing in for ICI on the simulated host mesh).  The CPU
+numbers are order-of-magnitude — they only have to rank backends and convert
+measured bytes/FLOPs into comparable seconds, not predict wall time.
+
+``spec_for_platform`` maps a ``jax.default_backend()`` platform string onto
+a spec; the measured-cost layer (``roofline/planner_costs.py``) prices every
+sample through it.
+"""
+
 from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["TPUv5e", "HW"]
+__all__ = ["TPUChip", "TPUv5e", "CPUHost", "HW", "SPECS", "spec_for_platform"]
 
 
 @dataclasses.dataclass(frozen=True)
 class TPUChip:
     name: str
-    peak_bf16_flops: float     # FLOP/s per chip
-    hbm_bandwidth: float       # bytes/s per chip
+    peak_bf16_flops: float  # FLOP/s per chip
+    hbm_bandwidth: float  # bytes/s per chip
     ici_link_bandwidth: float  # bytes/s per link
     hbm_bytes: float
 
@@ -23,4 +35,19 @@ TPUv5e = TPUChip(
     hbm_bytes=16e9,
 )
 
+CPUHost = TPUChip(
+    name="cpu-host",
+    peak_bf16_flops=1e12,
+    hbm_bandwidth=100e9,
+    ici_link_bandwidth=25e9,
+    hbm_bytes=64e9,
+)
+
 HW = TPUv5e
+
+SPECS = {"tpu": TPUv5e, "cpu": CPUHost}
+
+
+def spec_for_platform(platform: str) -> TPUChip:
+    """Spec for a ``jax.default_backend()`` name; unknown platforms get CPUHost."""
+    return SPECS.get(str(platform), CPUHost)

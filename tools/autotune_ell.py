@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""Autotune the ELL kernel's tiling against the roofline cost model.
+
+    python tools/autotune_ell.py --n 4096 --m 32768 --batch 16 \
+        --block-rows 128,256,512 --widths 8,32,128 --widths 4,16,64,256
+
+Sweeps ``block_rows`` x bucket-``widths`` candidates for the batched ELL
+push (``repro.kernels.spmv_ell.ops.spmv_ell_batch``): each candidate is
+lowered to optimized HLO at the requested [B, n] operand shape, its FLOPs
+and bytes read from ``compiled.cost_analysis()``, and priced in seconds by
+the same per-platform roofline model the planner's measured cost table
+uses (``repro.roofline``).  Candidates are ranked by modeled seconds; pass
+``--time`` to also wall-clock each compiled candidate as a sanity check.
+
+``--store TABLE.json`` appends the winner as a ``StepCostSample`` to a
+planner cost table (created if missing) so ``choose_backend`` /
+``plan_query`` price the ELL backend from the tuned point — point
+``$REPRO_ROOFLINE_TABLE`` at the file.  See docs/ROOFLINE.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.graph import web_graph  # noqa: E402
+from repro.kernels.spmv_ell.ops import DEFAULT_BLOCK_ROWS, spmv_ell_batch  # noqa: E402
+from repro.roofline import roofline_seconds  # noqa: E402
+from repro.roofline.planner_costs import (  # noqa: E402
+    CostTable,
+    StepCostSample,
+    _cost_analysis,
+)
+
+
+def _parse_int_list(text: str) -> tuple:
+    vals = tuple(int(t) for t in text.replace(" ", "").split(",") if t)
+    if not vals:
+        raise argparse.ArgumentTypeError(f"empty int list: {text!r}")
+    return vals
+
+
+def _padded_slots(ell) -> int:
+    """Total ELL slots the kernel streams (padding included) + overflow."""
+    return int(sum(int(np.prod(b.src_idx.shape)) for b in ell.buckets) + int(ell.ovf_src.shape[0]))
+
+
+def measure_candidate(g, widths, row_align, block_rows, batch, dtype):
+    """Lower one (widths, block_rows) point and price it on the roofline."""
+    ell = g.ell(widths=tuple(widths), row_align=int(row_align))
+    dt = np.dtype(dtype).name
+
+    def fn(W):
+        return spmv_ell_batch(ell, W, block_rows=int(block_rows))
+
+    compiled = jax.jit(fn).lower(jax.ShapeDtypeStruct((batch, g.n), dt)).compile()
+    ca = _cost_analysis(compiled)
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    platform = jax.default_backend()
+    return compiled, dict(
+        widths=list(widths),
+        row_align=int(row_align),
+        block_rows=int(block_rows),
+        flops=flops,
+        bytes_accessed=byts,
+        padded_slots=_padded_slots(ell),
+        fill=round(int(g.m) / max(1, _padded_slots(ell)), 4),
+        model_seconds=roofline_seconds(flops, byts, 0.0, platform),
+    )
+
+
+def wall_time(compiled, batch, n, dtype, repeats: int = 3) -> float:
+    W = np.zeros((batch, n), dtype=np.dtype(dtype))
+    jax.block_until_ready(compiled(W))  # warmup (first-call dispatch)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(W))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=4096, help="synthetic graph vertices")
+    ap.add_argument("--m", type=int, default=32768, help="synthetic graph edges")
+    ap.add_argument("--seed", type=int, default=17)
+    ap.add_argument("--dangling-frac", type=float, default=0.25)
+    ap.add_argument("--batch", type=int, default=16, help="[B, n] operand rows")
+    ap.add_argument("--dtype", default="float64")
+    ap.add_argument(
+        "--block-rows",
+        type=_parse_int_list,
+        default=(128, DEFAULT_BLOCK_ROWS, 512),
+        help="comma list of row-tile sizes to sweep",
+    )
+    ap.add_argument(
+        "--widths",
+        type=_parse_int_list,
+        action="append",
+        default=None,
+        help="comma list of bucket widths; repeat for multiple candidates",
+    )
+    ap.add_argument("--row-align", type=int, default=8)
+    ap.add_argument("--time", action="store_true", help="also wall-clock each point")
+    ap.add_argument("--out", default=None, help="write the report JSON here")
+    ap.add_argument(
+        "--store",
+        default=None,
+        help="append the winner to this planner CostTable JSON",
+    )
+    args = ap.parse_args(argv)
+    widths_cands = args.widths or [(8, 32, 128), (4, 16, 64, 256), (16, 64)]
+
+    g = web_graph(args.n, args.m, dangling_frac=args.dangling_frac, seed=args.seed)
+    platform = jax.default_backend()
+    report = dict(
+        bench="autotune_ell",
+        platform=platform,
+        n=int(g.n),
+        m=int(g.m),
+        batch=int(args.batch),
+        dtype=np.dtype(args.dtype).name,
+        candidates=[],
+    )
+    for widths in widths_cands:
+        for br in args.block_rows:
+            compiled, cand = measure_candidate(
+                g, widths, args.row_align, br, args.batch, args.dtype
+            )
+            if args.time:
+                cand["wall_seconds"] = wall_time(compiled, args.batch, g.n, args.dtype)
+            report["candidates"].append(cand)
+            print(
+                f"widths={tuple(widths)} block_rows={br}: "
+                f"{cand['bytes_accessed']:.4g} B, {cand['flops']:.4g} FLOPs, "
+                f"fill={cand['fill']:.2%} -> ~{cand['model_seconds']:.3g} s/round"
+                + (f" (wall {cand['wall_seconds']:.3g} s)" if args.time else "")
+            )
+    best = min(report["candidates"], key=lambda c: c["model_seconds"])
+    report["best"] = best
+    print(
+        f"best: widths={tuple(best['widths'])} block_rows={best['block_rows']} "
+        f"(~{best['model_seconds']:.3g} s/round modeled on {platform})"
+    )
+    if args.out:
+        Path(args.out).write_text(
+            json.dumps(report, indent=2, sort_keys=True) + "\n", encoding="utf-8"
+        )
+        print(f"wrote {args.out}")
+    if args.store:
+        path = Path(args.store)
+        table = CostTable.load(path, strict=False) if path.exists() else CostTable()
+        table.add(
+            StepCostSample(
+                backend="ell",
+                platform=platform,
+                op="push_batch" if args.batch > 1 else "push",
+                n=int(g.n),
+                m=int(g.m),
+                batch=int(args.batch),
+                dtype=np.dtype(args.dtype).name,
+                flops=best["flops"],
+                bytes_accessed=best["bytes_accessed"],
+                collective_bytes=0.0,
+                seconds=best["model_seconds"],
+            )
+        )
+        table.save(path)
+        print(f"stored winner in {path} ({len(table)} sample(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
