@@ -1,0 +1,38 @@
+"""repro-lint: static analysis enforcing the repo's own contracts.
+
+Two layers (full catalog in docs/ANALYSIS.md, CLI in tools/repro_lint.py):
+
+  * AST rules (RL0xx, :mod:`.ast_rules`) read source without importing it:
+    determinism discipline (wall-clock, seedless RNG, literal PRNG keys),
+    doc-citation resolution, typed-config discipline, capability/definition
+    consistency.
+  * trace rules (RL1xx, :mod:`.trace_rules`) abstractly trace every
+    registered backend and hold the lowering against its declared
+    :class:`~repro.core.backends.BackendCapabilities` row: dtype promotion,
+    donation, host sync, and the sharded collective schedule.
+
+This package root is import-light by design — no jax until the trace
+layer is actually invoked — so the CLI can shape the environment
+(XLA_FLAGS device count, x64) before jax loads.
+"""
+
+from .baseline import STRICT_DIRS, BaselineError, load_baseline, write_baseline
+from .rules import RULES, Rule, Violation, rule_for
+from .runner import Report, collect_files, run
+from .suppress import is_suppressed, line_suppressions
+
+__all__ = [
+    "RULES",
+    "Rule",
+    "Violation",
+    "rule_for",
+    "Report",
+    "collect_files",
+    "run",
+    "STRICT_DIRS",
+    "BaselineError",
+    "load_baseline",
+    "write_baseline",
+    "is_suppressed",
+    "line_suppressions",
+]

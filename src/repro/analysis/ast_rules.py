@@ -1,0 +1,414 @@
+"""Layer-1 rules: pure ``ast`` analysis, no imports of the analyzed code.
+
+Each rule is a function ``(path, tree, text) -> list[Violation]`` over one
+parsed module; :func:`analyze_source` runs every rule whose path scope
+matches.  Import aliases are resolved properly (``import numpy as np``,
+``from jax import random``, ``from time import sleep as zzz``) so the rules
+fire on what a call *means*, not on how it is spelled — and, symmetrically,
+do not fire on an unrelated ``self.random()``.
+
+Rules (catalog with rationale/examples in docs/ANALYSIS.md):
+
+  RL001  wall-clock calls outside the Clock seam (serve/clock.py)
+  RL002  legacy global-state RNG (np.random.rand, random.seed, ...)
+  RL003  literal-seed jax.random.PRNGKey in library code
+  RL004  unresolvable ``<doc>.md §<token>`` comment citations
+  RL005  **kwargs passthrough around the typed solver configs
+  RL006  push_batch definition vs. declared ``batched=`` consistency
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .citations import CITATION_RE, resolve_citation
+from .rules import Violation
+
+__all__ = ["analyze_source", "AST_RULES"]
+
+# serve/clock.py is the one module allowed to touch wall time directly —
+# everything else injects a Clock (PR 7's determinism seam).
+_CLOCK_SEAM = "src/repro/serve/clock.py"
+
+_WALL_CLOCK = {"time.time", "time.sleep"}
+
+# numpy legacy global-state API (np.random.<fn> without a Generator) and the
+# stdlib equivalents: every call mutates hidden process-wide state.
+_NP_LEGACY = {
+    "beta",
+    "binomial",
+    "bytes",
+    "chisquare",
+    "choice",
+    "dirichlet",
+    "exponential",
+    "gamma",
+    "geometric",
+    "get_state",
+    "gumbel",
+    "laplace",
+    "logistic",
+    "lognormal",
+    "multinomial",
+    "multivariate_normal",
+    "normal",
+    "pareto",
+    "permutation",
+    "poisson",
+    "rand",
+    "randint",
+    "randn",
+    "random",
+    "random_integers",
+    "random_sample",
+    "ranf",
+    "sample",
+    "seed",
+    "set_state",
+    "shuffle",
+    "standard_cauchy",
+    "standard_exponential",
+    "standard_gamma",
+    "standard_normal",
+    "standard_t",
+    "uniform",
+    "vonmises",
+    "zipf",
+}
+_STDLIB_RANDOM = {
+    "betavariate",
+    "choice",
+    "choices",
+    "expovariate",
+    "gauss",
+    "getrandbits",
+    "lognormvariate",
+    "normalvariate",
+    "paretovariate",
+    "randint",
+    "random",
+    "randrange",
+    "sample",
+    "seed",
+    "shuffle",
+    "triangular",
+    "uniform",
+    "vonmisesvariate",
+    "weibullvariate",
+}
+
+_PRNGKEY = {"jax.random.PRNGKey", "jax.random.key"}
+
+# callees a ``**kwargs`` splat may legally flow into: the typed-config
+# funnel itself plus plain data containers.
+_KWARGS_OK_NAMES = {"make_config", "config_for", "dict", "partial", "replace"}
+
+_BACKEND_BASES = {"SolverBackend", "StepBackend"}
+
+
+class _ImportMap(ast.NodeVisitor):
+    """module-alias / name -> dotted-path maps for call resolution."""
+
+    def __init__(self):
+        self.modules: dict[str, str] = {}  # "np" -> "numpy"
+        self.names: dict[str, str] = {}  # "PRNGKey" -> "jax.random.PRNGKey"
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.modules[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0]
+            )
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level or not node.module:
+            return  # relative imports never reach time/numpy/jax
+        for a in node.names:
+            self.names[a.asname or a.name] = f"{node.module}.{a.name}"
+
+
+def _resolve_call(imports: _ImportMap, func: ast.AST):
+    """Dotted path a call target resolves to, or None for local/dynamic."""
+    parts = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    base = node.id
+    if base in imports.names:
+        resolved = imports.names[base]
+    elif base in imports.modules:
+        resolved = imports.modules[base]
+    else:
+        return None
+    return ".".join([resolved] + list(reversed(parts)))
+
+
+def _walk_calls(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+# -- RL001 / RL002 / RL003: resolved-call rules ----------------------------
+def _rule_calls(path: str, tree: ast.AST, text: str) -> list:
+    out = []
+    imports = _ImportMap()
+    imports.visit(tree)
+    in_src = path.startswith("src/")
+    for call in _walk_calls(tree):
+        target = _resolve_call(imports, call.func)
+        if target is None:
+            continue
+        if target in _WALL_CLOCK and path != _CLOCK_SEAM:
+            out.append(
+                Violation(
+                    "RL001",
+                    path,
+                    call.lineno,
+                    call.col_offset,
+                    f"{target}() outside the Clock seam ({_CLOCK_SEAM}); "
+                    f"inject a Clock, or time.perf_counter for wall-time "
+                    f"instrumentation",
+                )
+            )
+        leaf = target.rsplit(".", 1)[-1]
+        np_legacy = target.startswith("numpy.random.") and leaf in _NP_LEGACY
+        std_legacy = target.startswith("random.") and leaf in _STDLIB_RANDOM
+        if np_legacy or std_legacy:
+            out.append(
+                Violation(
+                    "RL002",
+                    path,
+                    call.lineno,
+                    call.col_offset,
+                    f"{target}() draws from hidden global RNG state; use an "
+                    f"explicit np.random.default_rng(seed) / Generator",
+                )
+            )
+        if (
+            in_src
+            and target in _PRNGKEY
+            and call.args
+            and isinstance(call.args[0], ast.Constant)
+            and isinstance(call.args[0].value, int)
+        ):
+            out.append(
+                Violation(
+                    "RL003",
+                    path,
+                    call.lineno,
+                    call.col_offset,
+                    f"{target}({call.args[0].value}) bakes a literal seed "
+                    f"into library code; take the seed from config/caller",
+                )
+            )
+    return out
+
+
+# -- RL004: doc citations --------------------------------------------------
+def _rule_citations(path: str, tree: ast.AST, text: str, root: Path) -> list:
+    out = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in CITATION_RE.finditer(line):
+            doc_name, token = m.group(1), m.group(2)
+            ok, detail = resolve_citation(root, doc_name, token)
+            if not ok:
+                out.append(
+                    Violation(
+                        "RL004",
+                        path,
+                        lineno,
+                        m.start(),
+                        f"citation {doc_name} §{token} does not resolve: "
+                        f"{detail}",
+                    )
+                )
+    return out
+
+
+# -- RL005: **kwargs passthrough -------------------------------------------
+def _callee_allows_kwargs(imports: _ImportMap, func: ast.AST) -> bool:
+    if isinstance(func, ast.Call):
+        # calling the RESULT of a typed-config factory — the
+        # ``config_for(method)(**kwargs)`` funnel — inherits its licence.
+        return _callee_allows_kwargs(imports, func.func)
+    name = None
+    if isinstance(func, ast.Name):
+        name = func.id
+    elif isinstance(func, ast.Attribute):
+        name = func.attr
+    if name is None:
+        return False  # dynamic callee (subscript): opaque
+    resolved = _resolve_call(imports, func)
+    leaf = (resolved or name).rsplit(".", 1)[-1]
+    return leaf in _KWARGS_OK_NAMES or leaf.endswith("Config")
+
+
+def _rule_kwargs_passthrough(path: str, tree: ast.AST, text: str) -> list:
+    if not path.startswith("src/"):
+        return []
+    out = []
+    imports = _ImportMap()
+    imports.visit(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.args.kwarg is None:
+            continue
+        kw_name = node.args.kwarg.arg
+        for call in _walk_calls(node):
+            splats = [
+                k
+                for k in call.keywords
+                if k.arg is None
+                and isinstance(k.value, ast.Name)
+                and k.value.id == kw_name
+            ]
+            if not splats or _callee_allows_kwargs(imports, call.func):
+                continue
+            out.append(
+                Violation(
+                    "RL005",
+                    path,
+                    call.lineno,
+                    call.col_offset,
+                    f"**{kw_name} of {node.name}() splatted through an "
+                    f"untyped call; accept explicit parameters or a typed "
+                    f"*Config (make_config) so bad keys fail at the boundary",
+                )
+            )
+    return out
+
+
+# -- RL006: capability declarations vs. push_batch -------------------------
+def _is_backend_class(node: ast.ClassDef) -> bool:
+    for base in node.bases:
+        name = base.attr if isinstance(base, ast.Attribute) else None
+        if isinstance(base, ast.Name):
+            name = base.id
+        if name in _BACKEND_BASES:
+            return True
+    for deco in node.decorator_list:
+        f = deco.func if isinstance(deco, ast.Call) else deco
+        name = f.attr if isinstance(f, ast.Attribute) else None
+        if isinstance(f, ast.Name):
+            name = f.id
+        if name == "register_step_impl":
+            return True
+    return False
+
+
+def _assigns_name(item: ast.stmt, name: str) -> bool:
+    if not isinstance(item, ast.Assign):
+        return False
+    return any(isinstance(t, ast.Name) and t.id == name for t in item.targets)
+
+
+def _declared_batched(node: ast.ClassDef):
+    """Explicit ``batched=`` keyword of the class's declaration, if any.
+
+    Reads the class-level ``capabilities_decl = BackendCapabilities(...)``
+    (the introspectable form core/backends.py uses) or, failing that, the
+    first ``return BackendCapabilities(...)`` inside a ``capabilities``
+    method.  Returns True/False for an explicit keyword, None when the
+    declaration leaves ``batched`` defaulted or is not statically visible.
+    """
+    decl_call = None
+    for item in node.body:
+        if _assigns_name(item, "capabilities_decl") and isinstance(item.value, ast.Call):
+            decl_call = item.value
+        if isinstance(item, ast.FunctionDef) and item.name == "capabilities":
+            for sub in ast.walk(item):
+                if isinstance(sub, ast.Return) and isinstance(sub.value, ast.Call):
+                    decl_call = decl_call or sub.value
+                    break
+    if decl_call is None:
+        return None
+    for kw in decl_call.keywords:
+        if kw.arg == "batched" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return None
+
+
+def _push_batch_def(node: ast.ClassDef):
+    """("real" | "stub" | None) for the class's own push_batch."""
+    for item in node.body:
+        if isinstance(item, ast.FunctionDef) and item.name == "push_batch":
+            body = [
+                s
+                for s in item.body
+                if not (
+                    isinstance(s, ast.Expr)
+                    and isinstance(s.value, ast.Constant)
+                    and isinstance(s.value.value, str)
+                )
+            ]
+            if len(body) == 1 and isinstance(body[0], ast.Raise):
+                return "stub"
+            return "real"
+        if _assigns_name(item, "push_batch"):
+            if isinstance(item.value, ast.Constant) and item.value.value is None:
+                return "stub"
+    return None
+
+
+def _rule_capability_consistency(path: str, tree: ast.AST, text: str) -> list:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef) or not _is_backend_class(node):
+            continue
+        batched = _declared_batched(node)
+        push_batch = _push_batch_def(node)
+        if push_batch == "real" and batched is False:
+            out.append(
+                Violation(
+                    "RL006",
+                    path,
+                    node.lineno,
+                    node.col_offset,
+                    f"backend {node.name} defines push_batch but declares "
+                    f"batched=False — the planner would never route [B, n] "
+                    f"batches to it; declare batched=True or drop the method",
+                )
+            )
+        if push_batch == "stub" and batched is True:
+            out.append(
+                Violation(
+                    "RL006",
+                    path,
+                    node.lineno,
+                    node.col_offset,
+                    f"backend {node.name} declares batched=True but its "
+                    f"push_batch is a stub — the planner would hand it "
+                    f"[B, n] batches it cannot serve",
+                )
+            )
+    return out
+
+
+AST_RULES = (
+    "RL001",
+    "RL002",
+    "RL003",
+    "RL004",
+    "RL005",
+    "RL006",
+)
+
+
+def analyze_source(path: str, text: str, root: Path) -> list:
+    """All Layer-1 violations for one file (unsuppressed, unbaselined).
+
+    ``path`` is repo-relative posix; a syntax error is reported as a
+    zero-code parse failure by the runner, not here.
+    """
+    tree = ast.parse(text)
+    out = []
+    out.extend(_rule_calls(path, tree, text))
+    out.extend(_rule_citations(path, tree, text, root))
+    out.extend(_rule_kwargs_passthrough(path, tree, text))
+    out.extend(_rule_capability_consistency(path, tree, text))
+    return sorted(out, key=lambda v: (v.line, v.col, v.code))

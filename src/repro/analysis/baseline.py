@@ -1,0 +1,83 @@
+"""Baseline / ratchet file for grandfathered violations.
+
+Modeled on ``tools/format_clean.txt``: a committed plain-text manifest that
+CI reads, except inverted — where the format manifest lists files already
+*clean*, the lint baseline lists violations already *known*, so the gate
+only fails on regressions while the debt ratchets down:
+
+  * each line is ``path:CODE:count`` — up to ``count`` findings of ``CODE``
+    in ``path`` are tolerated;
+  * MORE findings than budgeted fail (a regression);
+  * FEWER findings are reported as ratchet progress — run
+    ``tools/repro_lint.py --update-baseline`` to tighten the budget;
+  * the contract dirs (``src/repro/core/``, ``src/repro/roofline/``,
+    ``src/repro/serve/``) may never carry baseline entries: the contracts
+    the analyzer enforces originate there, so debt is not grandfatherable
+    and loading such an entry is a hard configuration error.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+__all__ = ["STRICT_DIRS", "BaselineError", "load_baseline", "write_baseline"]
+
+# directories whose baseline budget is pinned to zero — see module docstring
+STRICT_DIRS = ("src/repro/core/", "src/repro/roofline/", "src/repro/serve/")
+
+_HEADER = """\
+# repro-lint baseline — grandfathered violations, one ``path:CODE:count``
+# per line (see docs/ANALYSIS.md).  CI tolerates at most ``count`` findings
+# of ``CODE`` in ``path``; anything beyond is a regression and fails.  When
+# a fix shrinks a count, tighten with: tools/repro_lint.py --update-baseline
+# src/repro/core/, src/repro/roofline/ and src/repro/serve/ must never
+# appear here (hard error): contract code carries no grandfathered debt.
+"""
+
+
+class BaselineError(ValueError):
+    """Malformed or contract-violating baseline file."""
+
+
+def load_baseline(path) -> dict:
+    """{(repo-relative path, code) -> budget} from ``path`` (may not exist)."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    out: dict[tuple, int] = {}
+    for lineno, raw in enumerate(p.read_text(encoding="utf-8").splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.rsplit(":", 2)
+        if len(parts) != 3 or not parts[2].isdigit():
+            raise BaselineError(f"{p}:{lineno}: expected 'path:CODE:count', got {raw!r}")
+        fpath, code, count = parts[0], parts[1], int(parts[2])
+        if any(fpath.startswith(d) for d in STRICT_DIRS):
+            raise BaselineError(
+                f"{p}:{lineno}: {fpath} is under a zero-baseline contract "
+                f"dir ({', '.join(STRICT_DIRS)}) — fix the violation instead "
+                f"of baselining it"
+            )
+        if count < 1:
+            raise BaselineError(f"{p}:{lineno}: count must be >= 1")
+        out[(fpath, code)] = out.get((fpath, code), 0) + count
+    return out
+
+
+def write_baseline(path, counts: dict) -> None:
+    """Write ``{(path, code) -> count}`` as a fresh baseline manifest.
+
+    Entries under :data:`STRICT_DIRS` are refused — those findings must be
+    fixed, and writing them would only move the failure to the next load.
+    """
+    strict = sorted(f"{p}:{c}" for (p, c) in counts if any(p.startswith(d) for d in STRICT_DIRS))
+    if strict:
+        raise BaselineError(
+            "refusing to baseline findings in zero-baseline contract dirs: " + ", ".join(strict)
+        )
+    lines = [_HEADER]
+    for (fpath, code), count in sorted(counts.items()):
+        if count > 0:
+            lines.append(f"{fpath}:{code}:{count}\n")
+    Path(path).write_text("".join(lines), encoding="utf-8")

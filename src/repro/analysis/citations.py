@@ -1,0 +1,65 @@
+"""Doc-citation resolution (rule RL004).
+
+Code comments across the repo cite design docs as ``DESIGN.md §2`` /
+``API.md §Deprecations`` — the §token names a heading of the cited markdown
+file.  Those citations are load-bearing (DESIGN.md is the paper-to-code map;
+SHARDING.md carries the collective-bytes contract), so a citation that no
+longer resolves is doc rot the link checker cannot see: ``tools/
+check_links.py`` verifies ``[text](path)`` links, not prose citations.
+
+Resolution: ``NAME.md`` maps to ``docs/NAME.md`` (or ``NAME.md`` at the repo
+root); the §token resolves when some heading's first word — with any leading
+``§`` and trailing ``:`` stripped — equals the token.  ``DESIGN.md §2``
+matches the heading ``## §2 TPU adaptation of the ITA push``;
+``API.md §Deprecations`` matches ``## Deprecations``.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+__all__ = ["CITATION_RE", "doc_heading_tokens", "resolve_citation"]
+
+# <name>.md §<token> — the token stops at whitespace/punctuation that never
+# appears in a heading's first word.
+CITATION_RE = re.compile(r"\b([A-Za-z][\w\-]*\.md)\s*§\s*([\w.\-]+)")
+
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$")
+
+
+def _heading_token(heading: str) -> str:
+    first = heading.split()[0] if heading.split() else ""
+    return first.lstrip("§").rstrip(":").strip()
+
+
+def doc_heading_tokens(md_path: Path) -> set:
+    """First-word tokens of every heading in ``md_path`` (§/: stripped)."""
+    tokens = set()
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        m = _HEADING_RE.match(line)
+        if m:
+            tok = _heading_token(m.group(1))
+            if tok:
+                tokens.add(tok)
+    return tokens
+
+
+def resolve_citation(root: Path, doc_name: str, token: str):
+    """(resolves, detail) for one ``doc_name §token`` citation.
+
+    ``detail`` explains a failure — unknown doc vs. unknown section — and
+    names a few candidate tokens so the fix is one glance away.
+    """
+    candidates = [root / "docs" / doc_name, root / doc_name]
+    doc = next((p for p in candidates if p.exists()), None)
+    if doc is None:
+        return False, f"cited doc {doc_name!r} not found under docs/ or repo root"
+    tokens = doc_heading_tokens(doc)
+    if token in tokens:
+        return True, ""
+    near = ", ".join(sorted(tokens)[:8])
+    return False, (
+        f"§{token} does not match any heading of {doc.relative_to(root)} "
+        f"(heading tokens include: {near})"
+    )

@@ -1,0 +1,144 @@
+"""Rule registry and violation model for the repro-lint static analyzer.
+
+Every check the analyzer performs is a :class:`Rule` with a stable code
+(``RL0xx`` for AST-layer rules, ``RL1xx`` for trace-layer rules).  Codes are
+the suppression/baseline currency: inline ``# repro-lint: disable=<CODE>``
+markers, ``tools/repro_lint_baseline.txt`` entries and the JSON report all
+speak codes, so renaming a rule never invalidates a suppression.
+
+The catalog with rationale and examples lives in docs/ANALYSIS.md; the
+``summary`` strings here are the one-liners the CLI prints next to each code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Rule", "Violation", "RULES", "register_rule", "rule_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered check: stable code, layer, and a one-line summary."""
+
+    code: str  # "RL001"
+    name: str  # short kebab-case handle, e.g. "wall-clock"
+    layer: str  # "ast" | "trace"
+    summary: str  # one line for --list-rules / docs cross-check
+
+    def __post_init__(self):
+        if self.layer not in ("ast", "trace"):
+            raise ValueError(f"rule {self.code}: unknown layer {self.layer!r}")
+        prefix = "RL0" if self.layer == "ast" else "RL1"
+        if not self.code.startswith(prefix) or len(self.code) != 5:
+            raise ValueError(f"rule {self.code}: {self.layer}-layer codes are {prefix}xx")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding, anchored to a repo-relative path and 1-based line."""
+
+    code: str
+    path: str  # repo-relative posix path
+    line: int  # 1-based; 0 means "whole file / not line-addressable"
+    col: int  # 0-based column, 0 when not meaningful
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register_rule(code: str, name: str, layer: str, summary: str) -> Rule:
+    """Register a rule code; duplicate codes are a programming error."""
+    if code in RULES:
+        raise ValueError(f"duplicate rule code {code}")
+    rule = Rule(code=code, name=name, layer=layer, summary=summary)
+    RULES[code] = rule
+    return rule
+
+
+def rule_for(code: str) -> Rule:
+    if code not in RULES:
+        raise KeyError(f"unknown rule code {code!r}; known: {sorted(RULES)}")
+    return RULES[code]
+
+
+# -- Layer 1: AST rules ----------------------------------------------------
+register_rule(
+    "RL001",
+    "wall-clock",
+    "ast",
+    "time.time()/time.sleep() outside serve/clock.py (inject a Clock; "
+    "time.perf_counter is allowed for wall-time instrumentation)",
+)
+register_rule(
+    "RL002",
+    "seedless-rng",
+    "ast",
+    "legacy global-state RNG call (np.random.rand, random.random, ...); "
+    "use an explicit np.random.default_rng(seed) / Generator",
+)
+register_rule(
+    "RL003",
+    "hardcoded-prngkey",
+    "ast",
+    "jax.random.PRNGKey(<literal>) in library code; thread the seed in "
+    "from config/caller instead of baking it into src/",
+)
+register_rule(
+    "RL004",
+    "doc-citation",
+    "ast",
+    "a '<doc>.md §<token>' comment citation does not resolve against "
+    "the headings of the actual docs/ file",
+)
+register_rule(
+    "RL005",
+    "kwargs-passthrough",
+    "ast",
+    "**kwargs splatted through into a solver entry point; route through "
+    "the typed configs (make_config / *Config) instead",
+)
+register_rule(
+    "RL006",
+    "capability-mismatch",
+    "ast",
+    "backend class defines push_batch but declares batched=False (or "
+    "declares batched=True over a stub push_batch)",
+)
+
+# -- Layer 2: trace rules --------------------------------------------------
+register_rule(
+    "RL101",
+    "dtype-promotion",
+    "trace",
+    "backend push silently promotes/weakens a declared dtype "
+    "(float64/weak-type leak against capabilities().dtypes)",
+)
+register_rule(
+    "RL102",
+    "donation-mismatch",
+    "trace",
+    "capabilities().donation=True but the donated [B, n] buffer is not "
+    "actually aliased in the lowered batched push",
+)
+register_rule(
+    "RL103",
+    "host-sync",
+    "trace",
+    "declared-jittable push host-syncs under tracing (.item(), "
+    "np.asarray-on-tracer, callbacks) — hot path would block the device",
+)
+register_rule(
+    "RL104",
+    "collective-mismatch",
+    "trace",
+    "collectives in the lowered sharded schedule do not match the mesh "
+    "capabilities the backend declares (docs/SHARDING.md table)",
+)

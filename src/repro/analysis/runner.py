@@ -1,0 +1,202 @@
+"""Orchestrates one repro-lint pass: walk, analyze, suppress, baseline.
+
+The pipeline per run:
+
+  1. collect ``.py`` files under the requested paths (repo-relative);
+  2. Layer 1 (:mod:`.ast_rules`) on every file — pure ``ast``, never
+     imports the analyzed code;
+  3. Layer 2 (:mod:`.trace_rules`) once per run — imported lazily so a
+     ``--no-trace`` pass (or an environment without jax) never loads jax;
+  4. drop findings covered by an inline ``# repro-lint: disable=<CODE>``
+     marker (:mod:`.suppress`); markers that suppress nothing are noted;
+  5. charge the remainder against the baseline budget (:mod:`.baseline`):
+     within budget -> grandfathered, beyond budget -> failure, under
+     budget -> ratchet-progress note.
+
+The result is a :class:`Report`; ``report.ok()`` is the CI gate and
+``report.to_json()`` the machine-readable contract (``"version": 1``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+from .ast_rules import analyze_source
+from .baseline import load_baseline
+from .rules import Violation
+from .suppress import line_suppressions
+
+__all__ = ["Report", "collect_files", "run"]
+
+_SKIP_PARTS = {"__pycache__", ".git", ".venv", "node_modules"}
+
+
+@dataclasses.dataclass
+class Report:
+    """Outcome of one pass; ``violations`` are the gate-failing findings."""
+
+    files_checked: int
+    violations: list  # beyond suppression AND baseline budget
+    parse_errors: list  # (path, message) — un-analyzable files always fail
+    baselined: int  # findings absorbed by the baseline budget
+    suppressed: int  # findings absorbed by inline markers
+    progress: list  # (path, code, budget, count) where count < budget
+    notes: list  # skipped checks, useless suppressions, ratchet hints
+    counts: dict  # {(path, code): n} pre-baseline, for --update-baseline
+
+    def ok(self) -> bool:
+        return not self.violations and not self.parse_errors
+
+    def to_json(self) -> dict:
+        by_code: dict[str, int] = {}
+        for v in self.violations:
+            by_code[v.code] = by_code.get(v.code, 0) + 1
+        return {
+            "version": 1,
+            "ok": self.ok(),
+            "files_checked": self.files_checked,
+            "violations": [v.to_dict() for v in self.violations],
+            "parse_errors": [{"path": p, "message": m} for p, m in self.parse_errors],
+            "summary": {
+                "by_code": by_code,
+                "baselined": self.baselined,
+                "suppressed": self.suppressed,
+            },
+            "progress": [
+                {"path": p, "code": c, "budget": b, "count": n}
+                for p, c, b, n in self.progress
+            ],
+            "notes": list(self.notes),
+        }
+
+
+def collect_files(root, paths) -> list:
+    """Repo-relative posix paths of every ``.py`` file under ``paths``."""
+    root = Path(root).resolve()
+    out = []
+    for raw in paths:
+        p = Path(raw)
+        if not p.is_absolute():
+            p = root / p
+        p = p.resolve()
+        if p.is_file():
+            cands = [p]
+        elif p.is_dir():
+            cands = sorted(p.rglob("*.py"))
+        else:
+            raise FileNotFoundError(f"no such path: {raw}")
+        for f in cands:
+            if f.suffix != ".py" or _SKIP_PARTS.intersection(f.parts):
+                continue
+            out.append(f.relative_to(root).as_posix())
+    return sorted(set(out))
+
+
+def _apply_suppressions(violations, supp_by_path, notes) -> tuple:
+    """(kept, n_suppressed); flags markers that suppressed nothing."""
+    kept = []
+    used: dict[tuple, set] = {}
+    n_supp = 0
+    for v in violations:
+        codes = supp_by_path.get(v.path, {}).get(v.line, set())
+        if v.code in codes:
+            n_supp += 1
+            used.setdefault((v.path, v.line), set()).add(v.code)
+        else:
+            kept.append(v)
+    for path, by_line in sorted(supp_by_path.items()):
+        for line, codes in sorted(by_line.items()):
+            unused = codes - used.get((path, line), set())
+            for code in sorted(unused):
+                notes.append(
+                    f"{path}:{line}: suppression of {code} matches no "
+                    f"finding — stale marker, remove it"
+                )
+    return kept, n_supp
+
+
+def _apply_baseline(violations, budgets, notes) -> tuple:
+    """(failures, n_baselined, progress, counts) under the ratchet."""
+    counts: dict[tuple, int] = {}
+    for v in violations:
+        counts[(v.path, v.code)] = counts.get((v.path, v.code), 0) + 1
+    failures = []
+    n_base = 0
+    seen: dict[tuple, int] = {}
+    for v in violations:  # first `budget` findings per key are grandfathered
+        key = (v.path, v.code)
+        seen[key] = seen.get(key, 0) + 1
+        if seen[key] <= budgets.get(key, 0):
+            n_base += 1
+        else:
+            failures.append(v)
+    progress = []
+    for key, budget in sorted(budgets.items()):
+        n = counts.get(key, 0)
+        if n < budget:
+            path, code = key
+            progress.append((path, code, budget, n))
+            notes.append(
+                f"ratchet: {path} now has {n} x {code} (budget {budget}) — "
+                f"tighten with tools/repro_lint.py --update-baseline"
+            )
+    return failures, n_base, progress, counts
+
+
+def run(
+    root,
+    paths=("src", "tests"),
+    *,
+    trace: bool = True,
+    mesh_checks: bool = True,
+    baseline_path=None,
+) -> Report:
+    """One full repro-lint pass; see the module docstring for the stages."""
+    root = Path(root).resolve()
+    files = collect_files(root, paths)
+    notes: list[str] = []
+    parse_errors: list[tuple] = []
+    violations: list[Violation] = []
+    supp_by_path: dict[str, dict] = {}
+    texts: dict[str, str] = {}
+    for rel in files:
+        text = (root / rel).read_text(encoding="utf-8")
+        texts[rel] = text
+        supp = line_suppressions(text)
+        if supp:
+            supp_by_path[rel] = supp
+        try:
+            violations.extend(analyze_source(rel, text, root))
+        except SyntaxError as e:
+            parse_errors.append((rel, f"not parseable: {e.msg} (line {e.lineno})"))
+    if trace:
+        from .trace_rules import analyze_backends  # lazy: loads jax
+
+        tviols, tnotes = analyze_backends(root, mesh_checks=mesh_checks)
+        notes.extend(tnotes)
+        for v in tviols:
+            # suppression markers live in source files; load the anchor
+            # file's markers even when it was outside the walked paths.
+            if v.path not in supp_by_path and v.path not in texts:
+                f = root / v.path
+                if f.is_file():
+                    supp = line_suppressions(f.read_text(encoding="utf-8"))
+                    if supp:
+                        supp_by_path[v.path] = supp
+                    texts[v.path] = ""  # don't re-read for later anchors
+        violations.extend(tviols)
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.code))
+    kept, n_supp = _apply_suppressions(violations, supp_by_path, notes)
+    budgets = load_baseline(baseline_path) if baseline_path else {}
+    failures, n_base, progress, counts = _apply_baseline(kept, budgets, notes)
+    return Report(
+        files_checked=len(files),
+        violations=failures,
+        parse_errors=parse_errors,
+        baselined=n_base,
+        suppressed=n_supp,
+        progress=progress,
+        notes=notes,
+        counts=counts,
+    )

@@ -1,0 +1,40 @@
+"""Per-line suppression markers.
+
+A violation is silenced by a marker on its own line::
+
+    t0 = time.time()  # repro-lint: disable=<CODE>
+
+with ``<CODE>`` the rule code to silence, e.g. ``disable=RL001``.
+Multiple codes separate with commas (``disable=RL001,RL004``).  Markers are
+deliberately line-scoped — a file-wide opt-out belongs in the baseline file,
+where the ratchet can see (and shrink) it.  Trace-layer findings anchor to
+the backend's ``class`` statement line, so the same marker works there.
+
+Suppressions of codes that did not fire on that line are reported as
+"useless suppression" notes by the runner: stale markers rot into false
+confidence and should be removed.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["line_suppressions", "is_suppressed"]
+
+_MARKER_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9, ]+)")
+
+
+def line_suppressions(text: str) -> dict:
+    """{1-based line -> set of codes} for every marker in ``text``."""
+    out: dict[int, set] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        m = _MARKER_RE.search(line)
+        if m:
+            codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            if codes:
+                out[lineno] = codes
+    return out
+
+
+def is_suppressed(violation, suppressions: dict) -> bool:
+    return violation.code in suppressions.get(violation.line, set())

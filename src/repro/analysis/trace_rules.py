@@ -1,0 +1,361 @@
+"""Layer-2 rules: abstract-trace checks over the registered backends.
+
+Where the AST layer reads what the code *says*, this layer checks what the
+lowered program *does*: every backend in ``repro.core.backends.STEP_IMPLS``
+is abstractly traced (``jax.eval_shape`` / ``jax.make_jaxpr`` /
+``jit(...).lower(...)``) on a tiny probe graph — no solver runs, no real
+data moves — and the trace is held against the backend's own
+:class:`~repro.core.backends.BackendCapabilities` declaration:
+
+  RL101  the push promotes or weak-types a declared dtype;
+  RL102  ``donation=True`` but the lowered batched push never aliases the
+         donated [B, n] buffer (``tf.aliasing_output`` absent);
+  RL103  a declared-jittable push host-syncs under tracing (``.item()``,
+         ``np.asarray`` on a tracer, callback primitives in the jaxpr);
+  RL104  the collectives of the lowered sharded round (parsed from
+         optimized HLO via ``roofline.hlo_costs.parse_collectives``) fall
+         outside the docs/SHARDING.md schedule for the declared mesh
+         capability.
+
+Violations are anchored to the backend class's defining file/line (via
+``inspect``) so the finding lands where the fix goes.  Checks that cannot
+run here — too few devices for a mesh, a platform that cannot express
+donation — are reported as *notes*, never silently dropped.
+"""
+
+from __future__ import annotations
+
+import inspect
+from pathlib import Path
+
+from .rules import Violation
+
+__all__ = [
+    "TRACE_RULES",
+    "analyze_backends",
+    "check_collective_schedule",
+    "platform_expresses_donation",
+]
+
+TRACE_RULES = ("RL101", "RL102", "RL103", "RL104")
+
+# the one collective every mesh schedule is allowed: the scalar n_active
+# psum of the Management-thread CNT (one f64/s32 per execution — budget a
+# few words of slack for tupling).
+_SCALAR_COLLECTIVE_BYTES = 32.0
+
+# meshes the docs/SHARDING.md table speaks about, keyed by the capability
+# flag that opts a backend into each schedule.
+_MESH_BY_CAP = (("batch_parallel_mesh", (2, 1)), ("vertex_sharded_mesh", (2, 2)))
+
+
+def _anchor(cls, root: Path) -> tuple:
+    """(repo-relative path, 1-based line) of a backend class definition."""
+    try:
+        src = inspect.getsourcefile(cls)
+        _, line = inspect.getsourcelines(cls)
+    except (OSError, TypeError):
+        return f"<backend {cls.__name__}>", 0
+    p = Path(src).resolve()
+    try:
+        rel = p.relative_to(Path(root).resolve()).as_posix()
+    except ValueError:
+        rel = p.as_posix()
+    return rel, line
+
+
+def _probe_graph():
+    """Tiny fixed graph every trace probe shares (n=24, ring + chords)."""
+    import numpy as np
+
+    from ..graph.structure import graph_from_edges
+
+    n = 24
+    src = np.concatenate([np.arange(n), np.arange(0, n, 3)])
+    dst = np.concatenate([(np.arange(n) + 1) % n, (np.arange(0, n, 3) + 7) % n])
+    return graph_from_edges(src, dst, n)
+
+
+def platform_expresses_donation() -> bool:
+    """Whether this platform's lowering records donation at all.
+
+    CPU/GPU/TPU lowerings mark a donated, alias-compatible input with
+    ``tf.aliasing_output``; if even a trivially donatable identity-plus-one
+    doesn't get the marker here, absence proves nothing and RL102 must be
+    skipped (as a note) rather than fired.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    fn = jax.jit(lambda x: x + 1.0, donate_argnums=0)
+    text = fn.lower(jax.ShapeDtypeStruct((8,), jnp.float32)).as_text()
+    return "tf.aliasing_output" in text
+
+
+def _check_dtype_promotion(backend, g, ctx, anchor) -> list:
+    """RL101: eval_shape the push pair at every declared dtype."""
+    import jax
+
+    path, line = anchor
+    out = []
+    for dt in backend.capabilities().dtypes:
+        for op, shape in (("push", (g.n,)), ("push_batch", (4, g.n))):
+            fn = getattr(backend, op)
+            try:
+                res = jax.eval_shape(
+                    lambda a, fn=fn: fn(g, ctx, a), jax.ShapeDtypeStruct(shape, dt)
+                )
+            except Exception:
+                continue  # a push that won't trace at all is RL103's finding
+            got = res.dtype.name
+            if got != dt:
+                out.append(
+                    Violation(
+                        "RL101",
+                        path,
+                        line,
+                        0,
+                        f"{backend.name}.{op} promotes declared dtype {dt} to "
+                        f"{got}; a weakly-typed constant or np default is "
+                        f"leaking into the reduction",
+                    )
+                )
+            elif getattr(res, "weak_type", False):
+                out.append(
+                    Violation(
+                        "RL101",
+                        path,
+                        line,
+                        0,
+                        f"{backend.name}.{op} returns weak-typed {dt}; the "
+                        f"next op to touch it may silently re-promote — "
+                        f"anchor the dtype (jnp.asarray/astype) inside the push",
+                    )
+                )
+    return out
+
+
+def _check_donation(backend, g, ctx, anchor) -> list:
+    """RL102: donated [B, n] buffer must alias in the lowered batched push."""
+    import jax
+
+    path, line = anchor
+    dt = backend.capabilities().dtypes[-1]
+    fn = jax.jit(lambda W: backend.push_batch(g, ctx, W), donate_argnums=0)
+    try:
+        text = fn.lower(jax.ShapeDtypeStruct((4, g.n), dt)).as_text()
+    except Exception as e:
+        return [
+            Violation(
+                "RL102",
+                path,
+                line,
+                0,
+                f"{backend.name}.push_batch does not lower with the [B, n] "
+                f"buffer donated ({type(e).__name__}: {e}) yet declares "
+                f"donation=True",
+            )
+        ]
+    if "tf.aliasing_output" not in text:
+        return [
+            Violation(
+                "RL102",
+                path,
+                line,
+                0,
+                f"{backend.name} declares donation=True but the lowered "
+                f"push_batch never aliases the donated [B, n] buffer — the "
+                f"solver loop would silently hold two copies live",
+            )
+        ]
+    return []
+
+
+_CALLBACK_PRIMITIVES = ("callback", "debug_print")
+
+
+def _jaxpr_callbacks(jaxpr) -> list:
+    """Names of callback-flavoured primitives anywhere in a closed jaxpr."""
+    found = []
+    stack = [jaxpr.jaxpr]
+    seen = set()
+    while stack:
+        jx = stack.pop()
+        if id(jx) in seen:
+            continue
+        seen.add(id(jx))
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if any(tok in name for tok in _CALLBACK_PRIMITIVES):
+                found.append(name)
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    stack.append(inner)
+                if isinstance(v, (list, tuple)):
+                    for w in v:
+                        inner = getattr(w, "jaxpr", None)
+                        if inner is not None:
+                            stack.append(inner)
+    return found
+
+
+def _check_host_sync(backend, g, ctx, anchor) -> list:
+    """RL103: a declared-jittable push must trace without touching the host."""
+    import jax
+
+    path, line = anchor
+    dt = backend.capabilities().dtypes[-1]
+    try:
+        jaxpr = jax.make_jaxpr(lambda w: backend.push(g, ctx, w))(jax.ShapeDtypeStruct((g.n,), dt))
+    except Exception as e:
+        return [
+            Violation(
+                "RL103",
+                path,
+                line,
+                0,
+                f"{backend.name}.push host-syncs under tracing "
+                f"({type(e).__name__}): a declared-jittable push ran host "
+                f"code on a tracer (.item()/np.asarray/shape-dependent "
+                f"branch) — it cannot live in the device-resident loop",
+            )
+        ]
+    cbs = _jaxpr_callbacks(jaxpr)
+    if cbs:
+        return [
+            Violation(
+                "RL103",
+                path,
+                line,
+                0,
+                f"{backend.name}.push traces but embeds host callback "
+                f"primitive(s) {sorted(set(cbs))} — each round would block "
+                f"on a device->host->device round-trip",
+            )
+        ]
+    return []
+
+
+def check_collective_schedule(collectives, R: int, C: int) -> list:
+    """RL104 core: problems with a parsed collective schedule on (R, C).
+
+    Pure over :class:`repro.roofline.hlo_costs.CollectiveOp` records so
+    fixtures can hold handcrafted HLO against it.  The docs/SHARDING.md
+    contract: every mesh may psum the scalar n_active count (a tiny
+    all-reduce); a C-way vertex-sharded mesh (C > 1) additionally owns one
+    ``psum_scatter`` (reduce-scatter) over "model" per round; nothing else
+    — no all-gather, all-to-all or collective-permute on any mesh, and no
+    non-scalar all-reduce (that is the naive replicated-sum schedule the
+    scatter exists to avoid).
+    """
+    problems = []
+    for op in collectives:
+        if op.kind == "all-reduce" and op.bytes_per_exec <= _SCALAR_COLLECTIVE_BYTES:
+            continue  # scalar n_active psum — allowed everywhere
+        if C > 1 and op.kind == "reduce-scatter":
+            continue  # the psum_scatter of the column-sharded push
+        problems.append(
+            f"{op.kind} moving {op.bytes_per_exec:.0f} B/exec "
+            f"(x{op.multiplier:.0f}, in {op.computation}) is outside the "
+            f"SHARDING.md schedule for mesh (R={R}, C={C})"
+        )
+    return problems
+
+
+def _check_sharded_schedules(backend, g, anchor, n_dev: int, notes: list) -> list:
+    """RL104 driver: lower each declared mesh schedule and parse it."""
+    import jax
+
+    from ..roofline.hlo_costs import parse_collectives
+    from ..roofline.planner_costs import sharded_round_step
+
+    path, line = anchor
+    caps = backend.capabilities()
+    out = []
+    for cap_name, (R, C) in _MESH_BY_CAP:
+        if not getattr(caps, cap_name):
+            continue
+        if n_dev < R * C:
+            notes.append(
+                f"RL104: {backend.name} {cap_name} mesh ({R},{C}) skipped — "
+                f"needs {R * C} devices, have {n_dev} (run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={R * C})"
+            )
+            continue
+        try:
+            step, args, _ = sharded_round_step(
+                backend.name, g, (R, C), batch=2 * R, dtype="float64"
+            )
+            hlo = jax.jit(step).lower(*args).compile().as_text()
+        except Exception as e:
+            out.append(
+                Violation(
+                    "RL104",
+                    path,
+                    line,
+                    0,
+                    f"{backend.name} declares {cap_name} but its ({R},{C}) "
+                    f"round does not lower: {type(e).__name__}: {e}",
+                )
+            )
+            continue
+        for problem in check_collective_schedule(parse_collectives(hlo), R, C):
+            out.append(Violation("RL104", path, line, 0, f"{backend.name}: {problem}"))
+    return out
+
+
+def analyze_backends(root, *, mesh_checks: bool = True) -> tuple:
+    """(violations, notes) over every backend in the live registry.
+
+    Registration order does not matter — backends are visited sorted by
+    name so output is stable.  ``mesh_checks=False`` skips RL104's
+    lower-and-compile pass (the expensive part) for fast editor loops.
+    """
+    import jax
+
+    from ..core.backends import STEP_IMPLS
+
+    # the repo contract is float64 numerics (conftest/CLI both enable x64);
+    # without it every f64 declaration would "promote" to f32 and drown the
+    # report, so treat x64 as a precondition rather than a finding.
+    if not jax.config.jax_enable_x64:
+        jax.config.update("jax_enable_x64", True)
+
+    root = Path(root)
+    g = _probe_graph()
+    n_dev = len(jax.devices())
+    donation_expressible = platform_expresses_donation()
+    if not donation_expressible:
+        notes = [
+            "RL102: skipped — this platform's lowering never records "
+            "donation (no tf.aliasing_output on a trivially donatable "
+            "probe), so absence proves nothing"
+        ]
+    else:
+        notes = []
+    out = []
+    for name in sorted(STEP_IMPLS):
+        backend = STEP_IMPLS[name]
+        anchor = _anchor(type(backend), root)
+        caps = backend.capabilities()
+        try:
+            ctx = backend.prepare(g)
+        except Exception as e:
+            notes.append(f"trace layer: {name}.prepare failed ({type(e).__name__}: {e})")
+            continue
+        if not caps.jittable:
+            notes.append(
+                f"trace layer: {name} is declared host-driven "
+                f"(jittable=False) — RL101/RL102/RL103 do not apply"
+            )
+            continue
+        out.extend(_check_dtype_promotion(backend, g, ctx, anchor))
+        if caps.donation and donation_expressible:
+            out.extend(_check_donation(backend, g, ctx, anchor))
+        out.extend(_check_host_sync(backend, g, ctx, anchor))
+        if mesh_checks:
+            out.extend(_check_sharded_schedules(backend, g, anchor, n_dev, notes))
+        elif caps.batch_parallel_mesh or caps.vertex_sharded_mesh:
+            notes.append(f"RL104: {name} skipped (--no-mesh / mesh_checks=False)")
+    return sorted(out, key=lambda v: (v.path, v.line, v.code)), notes

@@ -64,6 +64,7 @@ from ..graph.structure import Graph
 
 __all__ = [
     "BackendCapabilities", "SolverBackend", "StepBackend", "STEP_IMPLS",
+    "STEP_IMPL_CLASSES", "declared_capabilities",
     "register_step_impl", "get_step_impl", "available_step_impls",
     "resolve_step_impl", "choose_backend", "ita_step_impl",
     "signed_ita_step_impl", "run_ita_loop",
@@ -150,11 +151,18 @@ class SolverBackend:
     """Base class: one edge-propagation layout/schedule.
 
     Subclasses implement the push pair and *declare* what they can do via
-    :meth:`capabilities` / :meth:`cost`; the engine planner does the rest.
+    the class-level ``capabilities_decl`` row (preferred — statically
+    introspectable, see :func:`declared_capabilities`) or by overriding
+    :meth:`capabilities`; the engine planner does the rest.
     """
 
     name: str = "?"
     jittable: bool = True
+    # Class-level capability declaration.  Setting it here (rather than
+    # constructing inside capabilities()) lets tools read the row without
+    # instantiating the backend — the repro-lint AST layer checks the
+    # declaration against the class body without importing this module.
+    capabilities_decl: Optional[BackendCapabilities] = None
 
     def prepare(self, g: Graph):
         """Per-graph context (pytree), built once outside the loop."""
@@ -168,8 +176,11 @@ class SolverBackend:
         return jax.vmap(lambda w: self.push(g, ctx, w))(W)
 
     def capabilities(self) -> BackendCapabilities:
-        """Declared capability row; default derives everything requiring a
-        traced loop from ``jittable``.  Override to declare more/less."""
+        """Declared capability row: the class-level ``capabilities_decl``
+        when set, else a default deriving everything requiring a traced
+        loop from ``jittable``."""
+        if self.capabilities_decl is not None:
+            return self.capabilities_decl
         return BackendCapabilities(
             jittable=self.jittable,
             donation=self.jittable,
@@ -197,6 +208,10 @@ StepBackend = SolverBackend
 
 STEP_IMPLS: dict[str, SolverBackend] = {}
 
+# name -> class, kept alongside the instances so capability declarations
+# can be read without executing backend code (declared_capabilities).
+STEP_IMPL_CLASSES: dict[str, type] = {}
+
 
 def register_step_impl(name: str) -> Callable[[type], type]:
     """Class decorator: instantiate and register a backend under ``name``."""
@@ -204,8 +219,27 @@ def register_step_impl(name: str) -> Callable[[type], type]:
         inst = cls()
         inst.name = name
         STEP_IMPLS[name] = inst
+        STEP_IMPL_CLASSES[name] = cls
         return cls
     return deco
+
+
+def declared_capabilities(backend) -> BackendCapabilities:
+    """Capability row for a backend name or class, without instantiation.
+
+    Resolves the class-level ``capabilities_decl`` (the introspectable
+    declaration every shipped backend sets); classes that leave it None get
+    the same jittable-derived default :meth:`SolverBackend.capabilities`
+    would build — so for every registered backend this is value-identical
+    to ``get_step_impl(name).capabilities()``.
+    """
+    cls = STEP_IMPL_CLASSES[backend] if isinstance(backend, str) else backend
+    decl = getattr(cls, "capabilities_decl", None)
+    if decl is not None:
+        return decl
+    jittable = bool(getattr(cls, "jittable", True))
+    return BackendCapabilities(
+        jittable=jittable, donation=jittable, batch_parallel_mesh=jittable)
 
 
 def get_step_impl(name: str) -> SolverBackend:
@@ -309,11 +343,10 @@ def resolve_step_impl(name: Optional[str]) -> str:
 class DenseBackend(StepBackend):
     """Sorted segment-sum over the full dst-sorted COO edge list."""
 
-    def capabilities(self) -> BackendCapabilities:
-        # the paper-faithful C>1 column-sharded schedule (partition_cols
-        # COO blocks + segment-sum, core/distributed.py), hence
-        # vertex_sharded_mesh.
-        return BackendCapabilities(vertex_sharded_mesh=True)
+    # the paper-faithful C>1 column-sharded schedule (partition_cols
+    # COO blocks + segment-sum, core/distributed.py), hence
+    # vertex_sharded_mesh.
+    capabilities_decl = BackendCapabilities(vertex_sharded_mesh=True)
 
     def push(self, g: Graph, ctx, w: jnp.ndarray) -> jnp.ndarray:
         return jax.ops.segment_sum(w[g.src], g.dst, num_segments=g.n,
@@ -331,11 +364,10 @@ class DenseBackend(StepBackend):
 class EllBackend(StepBackend):
     """Bucketed-ELL layout, Pallas kernel on the push (repro.kernels)."""
 
-    def capabilities(self) -> BackendCapabilities:
-        # the column-sharded (C > 1) push now has an ELL realisation —
-        # Graph.ell_partitioned(C) blocks through _batch_2d_ell_loop in
-        # core/distributed.py — so the layout serves every mesh shape.
-        return BackendCapabilities(vertex_sharded_mesh=True)
+    # the column-sharded (C > 1) push now has an ELL realisation —
+    # Graph.ell_partitioned(C) blocks through _batch_2d_ell_loop in
+    # core/distributed.py — so the layout serves every mesh shape.
+    capabilities_decl = BackendCapabilities(vertex_sharded_mesh=True)
 
     def cost(self, stats: Optional[dict] = None, cfg=None) -> float:
         # Mosaic-compiled tiles undercut the gather+segment-sum per edge;
@@ -400,6 +432,10 @@ class FrontierBackend(StepBackend):
     """
 
     jittable = False
+    # host-driven: everything requiring a traced device-resident loop is
+    # off; push_batch exists (sequential rows), so batched stays True.
+    capabilities_decl = BackendCapabilities(
+        jittable=False, donation=False, batch_parallel_mesh=False)
 
     def cost(self, stats: Optional[dict] = None, cfg=None) -> float:
         # compressed frontiers visit ~0.4x the edges over a solve, but the

@@ -246,15 +246,25 @@ def power_method_batch(
 
 _BATCH_SOLVERS = {"ita": ita_batch, "power": power_method_batch}
 
+# "leave this option at the solver's own default" marker: ita and power
+# defaults differ (max_iter 10_000 vs 1000, xi vs tol), so None cannot
+# stand in for "unset" (ctx=None is itself a meaningful value).
+_UNSET = object()
+
 
 def solve_pagerank_batch(g: Graph, p_batch: jnp.ndarray, method: str = "ita",
-                         **kwargs) -> BatchSolverResult:
+                         *, c=_UNSET, xi=_UNSET, tol=_UNSET, max_iter=_UNSET,
+                         dtype=_UNSET, step_impl=_UNSET, ctx=_UNSET,
+                         return_state=_UNSET) -> BatchSolverResult:
     """Solve PR(P, c, p_u) for every row p_u of ``p_batch`` in one pass.
 
-    ``p_batch`` must be float[B, n]; ``method`` is "ita" or "power" and
-    ``kwargs`` are forwarded to :func:`ita_batch` / :func:`power_method_batch`
-    (``c``, ``xi``/``tol``, ``max_iter``, ``dtype``, ``step_impl``,
-    ``ctx``).  The session form is ``PageRankEngine.solve_batch`` with a
+    ``p_batch`` must be float[B, n]; ``method`` is "ita" or "power".  The
+    solver options mirror :func:`ita_batch` / :func:`power_method_batch`
+    (``xi``/``return_state`` are ITA's, ``tol`` is power's); anything left
+    unset keeps that solver's own default.  Spelling the options out (vs.
+    the old ``**kwargs`` funnel) makes a misspelled option a ``TypeError``
+    here, at the API boundary.  The session form is
+    ``PageRankEngine.solve_batch`` with a
     :class:`~repro.core.solver_config.BatchConfig`, which adds mesh
     sharding (``EnginePlan.mesh`` / ``BatchConfig.shard_batch``).
     """
@@ -264,4 +274,8 @@ def solve_pagerank_batch(g: Graph, p_batch: jnp.ndarray, method: str = "ita",
     p_batch = jnp.asarray(p_batch)
     if p_batch.ndim != 2 or p_batch.shape[1] != g.n:
         raise ValueError(f"p_batch must be [B, n={g.n}], got {p_batch.shape}")
-    return _BATCH_SOLVERS[method](g, p_batch, **kwargs)
+    opts = {k: v for k, v in dict(
+        c=c, xi=xi, tol=tol, max_iter=max_iter, dtype=dtype,
+        step_impl=step_impl, ctx=ctx, return_state=return_state).items()
+        if v is not _UNSET}
+    return _BATCH_SOLVERS[method](g, p_batch, **opts)

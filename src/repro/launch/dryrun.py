@@ -39,14 +39,14 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
         rec.update(status="skipped", reason=cell.skip)
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         with mesh:
             job = build_job(arch, shape, mesh)
             lowered = job.lower()
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()

@@ -22,7 +22,7 @@ import time
 def _analyze(job, mesh, name, model_flops=None):
     from ..roofline.analysis import analyze_compiled
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         lowered = job.lower()
         compiled = lowered.compile()
@@ -41,7 +41,7 @@ def _analyze(job, mesh, name, model_flops=None):
     rep = analyze_compiled(name, "x".join(f"{k}={v}" for k, v in mesh.shape.items()),
                            mesh.size, cost, hlo, model_flops=model_flops,
                            memory_stats=mem_stats)
-    out = dict(name=name, compile_s=round(time.time() - t0, 1),
+    out = dict(name=name, compile_s=round(time.perf_counter() - t0, 1),
                memory=mem_stats, roofline=rep.to_dict())
     return out
 
@@ -49,15 +49,23 @@ def _analyze(job, mesh, name, model_flops=None):
 # ---------------------------------------------------------------------------
 # experiments
 # ---------------------------------------------------------------------------
-def exp_gc2d(multi_pod=False, **geom_overrides):
-    """graphcast × ogb_products with the ITA 2-D partition (shard_map)."""
+def exp_gc2d(multi_pod=False, *, edge_dtype=None, remat_g=None, e_pad=None):
+    """graphcast × ogb_products with the ITA 2-D partition (shard_map).
+
+    The geometry knobs are spelled out (the hillclimb's edge dtype, remat
+    granularity and per-device edge-block size); unset ones keep the
+    ``gc2d_geometry`` defaults.
+    """
     from ..models.gnn.sharded_mp import build_gc2d_job
     from .mesh import make_production_mesh
 
+    overrides = {k: v for k, v in dict(edge_dtype=edge_dtype, remat_g=remat_g,
+                                       e_pad=e_pad).items()
+                 if v is not None}
     mesh = make_production_mesh(multi_pod=multi_pod)
     job = build_gc2d_job(mesh, n=2_449_029, m=61_859_140, d_feat=100,
-                         n_classes=47, **geom_overrides)
-    return _analyze(job, mesh, job.name + str(geom_overrides or ""))
+                         n_classes=47, **overrides)
+    return _analyze(job, mesh, job.name + str(overrides or ""))
 
 
 def exp_lm_variant(arch="granite-34b", shape="train_4k", multi_pod=False,
@@ -86,10 +94,11 @@ def exp_lm_variant(arch="granite-34b", shape="train_4k", multi_pod=False,
                     model_flops=_model_flops(arch, shape, cell))
 
 
-def _gc2d_bf16(**kw):
+def _gc2d_bf16(multi_pod=False, remat_g=None):
     import jax.numpy as jnp
 
-    return exp_gc2d(edge_dtype=jnp.bfloat16, **kw)
+    return exp_gc2d(multi_pod=multi_pod, edge_dtype=jnp.bfloat16,
+                    remat_g=remat_g)
 
 
 def exp_pagerank_variant(dataset="in-2004", multi_pod=False, dtype="f32",

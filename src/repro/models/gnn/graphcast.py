@@ -2,7 +2,7 @@
 GNN.  Assigned config: 16 processor layers, d_hidden=512, mesh refinement 6,
 sum aggregator, 227 input variables.
 
-Adaptation (DESIGN.md §Arch-applicability): the assigned shape cells supply
+Adaptation (DESIGN.md §4, architecture applicability): the assigned shape cells supply
 generic graphs, so the grid↔mesh bipartite stages collapse onto the given
 graph — encoder/decoder are the node/edge MLPs (with LayerNorm, as in the
 paper), the processor is the 16-layer interaction network on the multi-mesh

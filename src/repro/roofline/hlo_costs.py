@@ -28,7 +28,7 @@ import dataclasses
 import re
 from typing import Optional
 
-__all__ = ["HloCosts", "parse_hlo_costs"]
+__all__ = ["HloCosts", "CollectiveOp", "parse_hlo_costs", "parse_collectives"]
 
 _DTYPE_BYTES = {
     "pred": 1,
@@ -132,22 +132,18 @@ def _split_computations(hlo: str) -> dict[str, list[_Op]]:
     return comps
 
 
-def parse_hlo_costs(hlo: str) -> HloCosts:
-    comps = _split_computations(hlo)
-    shapes = {op.name: op.out_shape for ops in comps.values() for op in ops}
+def _call_multipliers(hlo: str, comps: dict) -> dict:
+    """{computation -> executed-times multiplier}, empty when no ENTRY.
 
-    # --- call-graph multipliers ---------------------------------------
+    Fixpoint over call edges starting at the entry computation: while
+    body/cond inherit caller x trip count, fusion/call/to_apply inherit the
+    caller's multiplier unchanged.
+    """
     mult: dict[str, float] = {}
-    entry = None
     m_entry = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
-    if m_entry:
-        entry = m_entry.group(1)
-    else:  # fall back: last computation
-        entry = list(comps)[-1] if comps else None
+    entry = m_entry.group(1) if m_entry else (list(comps)[-1] if comps else None)
     if entry is None:
-        return HloCosts(0, 0, 0, {}, 0, {}, 0, [])
-
-    # iterate to fixpoint over call edges
+        return mult
     mult[entry] = 1.0
     for _ in range(64):
         changed = False
@@ -178,16 +174,90 @@ def parse_hlo_costs(hlo: str) -> HloCosts:
                                 changed = True
         if not changed:
             break
+    return mult
 
-    # fusion bodies: count flops inside (they execute with the caller's
-    # multiplier) but NOT bytes (fusion = one pass over caller operands).
-    fusion_callers: dict[str, str] = {}
+
+def _fusion_callers(comps: dict) -> dict:
+    """{fusion-body computation -> caller computation}."""
+    out: dict[str, str] = {}
     for cname, ops in comps.items():
         for op in ops:
             if op.kind == "fusion":
                 mm = _CALLS.search(op.rest)
                 if mm:
-                    fusion_callers[mm.group(1)] = cname
+                    out[mm.group(1)] = cname
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective in the optimized HLO, with its loop multiplier.
+
+    The shared vocabulary between the roofline cost model and the
+    repro-lint trace layer (rule RL104): ``kind`` is the ``-start``-
+    normalized HLO opcode, ``bytes_per_exec`` the operand bytes of one
+    execution, ``multiplier`` how many times the surrounding loops run it.
+    """
+
+    kind: str  # "all-reduce" | "reduce-scatter" | ...
+    bytes_per_exec: float
+    multiplier: float
+    computation: str  # computation the op appears in
+    op_name: str  # the HLO value name
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes_per_exec * self.multiplier
+
+
+def parse_collectives(hlo: str) -> list:
+    """Every collective op in ``hlo`` as :class:`CollectiveOp` records.
+
+    Same walk as :func:`parse_hlo_costs` (call-site granularity, loop
+    multipliers applied, fusion bodies skipped), factored out so consumers
+    that only need the collective *schedule* — which kinds move how many
+    bytes — can ask for exactly that.
+    """
+    comps = _split_computations(hlo)
+    shapes = {op.name: op.out_shape for ops in comps.values() for op in ops}
+    mult = _call_multipliers(hlo, comps)
+    fusion_bodies = set(_fusion_callers(comps))
+    out: list[CollectiveOp] = []
+    for cname, ops in comps.items():
+        m = mult.get(cname)
+        if m is None or cname in fusion_bodies:
+            continue
+        for op in ops:
+            kind = op.kind.replace("-start", "")
+            if kind not in _COLLECTIVES:
+                continue
+            operands = [mm.group(1) for mm in _OPERAND.finditer(op.rest.split(")", 1)[0])]
+            ib = sum(_shape_bytes(shapes.get(o, "")) for o in operands)
+            cb = ib if ib else _shape_bytes(op.out_shape)
+            out.append(
+                CollectiveOp(
+                    kind=kind,
+                    bytes_per_exec=float(cb),
+                    multiplier=float(m),
+                    computation=cname,
+                    op_name=op.name,
+                )
+            )
+    return out
+
+
+def parse_hlo_costs(hlo: str) -> HloCosts:
+    comps = _split_computations(hlo)
+    shapes = {op.name: op.out_shape for ops in comps.values() for op in ops}
+
+    # --- call-graph multipliers (shared with parse_collectives) -------
+    mult = _call_multipliers(hlo, comps)
+    if not mult:
+        return HloCosts(0, 0, 0, {}, 0, {}, 0, [])
+
+    # fusion bodies: count flops inside (they execute with the caller's
+    # multiplier) but NOT bytes (fusion = one pass over caller operands).
+    fusion_callers = _fusion_callers(comps)
 
     executed = {c: m for c, m in mult.items()}
 

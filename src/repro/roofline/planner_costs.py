@@ -49,6 +49,7 @@ __all__ = [
     "CostTable",
     "PlanCost",
     "measure_step",
+    "sharded_round_step",
     "measure_sharded_step",
     "roofline_seconds",
     "get_cost_table",
@@ -216,7 +217,7 @@ def measure_step(
     )
 
 
-def measure_sharded_step(
+def sharded_round_step(
     backend_name: str,
     g,
     mesh,
@@ -227,16 +228,14 @@ def measure_sharded_step(
     xi: float = 1e-10,
     ell_widths: tuple = (8, 32, 128),
     row_align: int = 8,
-) -> StepCostSample:
-    """Lower one sharded batched ITA round on an (R, C) mesh.
+) -> tuple:
+    """(step_fn, abstract_args, (R, C, B_pad)) for one sharded ITA round.
 
-    Needs R*C live devices (``resolve_mesh`` raises otherwise).  For C > 1
-    the parsed collective bytes are the per-device ``psum_scatter`` traffic
-    the analytic table in docs/SHARDING.md predicts — the contract tests in
-    tests/test_roofline.py hold the two within a stated tolerance.  For
-    C == 1 the lowered round is the real batch-parallel schedule (each
-    device runs the backend's own ``push_batch``; docs table: collective
-    "none" beyond the scalar n_active psum).
+    The lowerable form of the mesh schedules in ``core/distributed.py``,
+    shared by :func:`measure_sharded_step` (which prices the lowering) and
+    the repro-lint trace layer (which checks the *collective schedule* of
+    the same lowering against docs/SHARDING.md, rule RL104).  Needs R*C
+    live devices (``resolve_mesh`` raises otherwise).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -246,7 +245,6 @@ def measure_sharded_step(
     from ..core.distributed import (
         _batch_2d_operands_cached,
         _ell_cols_operands_cached,
-        _ell_leaf_list,
         make_ita_batch_ell_step,
         make_ita_batch_step,
         resolve_mesh,
@@ -255,7 +253,6 @@ def measure_sharded_step(
     mesh = resolve_mesh(mesh)
     R = mesh.shape["data"]
     C = mesh.shape["model"] if "model" in mesh.axis_names else 1
-    platform = jax.default_backend()
     dt = np.dtype(dtype).name
     B_pad = max(R, ((int(batch) + R - 1) // R) * R)
     if C == 1:
@@ -296,6 +293,44 @@ def measure_sharded_step(
         step = make_ita_batch_step(mesh, {"nr": part.nr}, float(c), float(xi))
         state = jax.ShapeDtypeStruct((B_pad, n_pad), dt)
         args = (state, state, src_d, dst_d, ideg, nd)
+    return step, args, (R, C, B_pad)
+
+
+def measure_sharded_step(
+    backend_name: str,
+    g,
+    mesh,
+    *,
+    batch: int = 8,
+    dtype="float64",
+    c: float = 0.85,
+    xi: float = 1e-10,
+    ell_widths: tuple = (8, 32, 128),
+    row_align: int = 8,
+) -> StepCostSample:
+    """Lower one sharded batched ITA round on an (R, C) mesh and price it.
+
+    Needs R*C live devices (``resolve_mesh`` raises otherwise).  For C > 1
+    the parsed collective bytes are the per-device ``psum_scatter`` traffic
+    the analytic table in docs/SHARDING.md predicts — the contract tests in
+    tests/test_roofline.py hold the two within a stated tolerance.  For
+    C == 1 the lowered round is the real batch-parallel schedule (each
+    device runs the backend's own ``push_batch``; docs table: collective
+    "none" beyond the scalar n_active psum).
+    """
+    platform = jax.default_backend()
+    dt = np.dtype(dtype).name
+    step, args, (R, C, B_pad) = sharded_round_step(
+        backend_name,
+        g,
+        mesh,
+        batch=batch,
+        dtype=dt,
+        c=c,
+        xi=xi,
+        ell_widths=ell_widths,
+        row_align=row_align,
+    )
     flops, byts, coll = _lower_costs(step, args, platform)
     return StepCostSample(
         backend=backend_name,

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""repro-lint CLI — static analysis of the repo against its own contracts.
+
+Usage (from the repo root; CI runs exactly this):
+
+    python tools/repro_lint.py                 # lint src/ and tests/
+    python tools/repro_lint.py src/repro/core  # restrict the walk
+    python tools/repro_lint.py --json          # machine-readable report
+    python tools/repro_lint.py --list-rules    # rule catalog one-liners
+    python tools/repro_lint.py --no-trace      # AST layer only (no jax)
+    python tools/repro_lint.py --update-baseline   # tighten the ratchet
+
+Exit codes: 0 clean, 1 findings (or parse errors), 2 usage/config error
+(bad path, malformed baseline, baseline entry in a zero-baseline dir).
+
+The trace layer inspects the lowered sharded schedules, which needs
+simulated devices — this script appends
+``--xla_force_host_platform_device_count=8`` to ``XLA_FLAGS`` (unless the
+caller already forces a count) BEFORE jax is imported, which is why the
+analysis package keeps jax out of its import graph.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE = "tools/repro_lint_baseline.txt"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint.py",
+        description="static analysis enforcing the repo's backend, "
+        "determinism and sharding contracts (docs/ANALYSIS.md)",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        default=["src", "tests"],
+        help="files/dirs to lint, repo-relative (default: src tests)",
+    )
+    ap.add_argument("--json", action="store_true", help="emit the JSON report")
+    ap.add_argument(
+        "--no-trace",
+        action="store_true",
+        help="skip the jax trace layer (RL1xx); pure-AST pass, no jax import",
+    )
+    ap.add_argument(
+        "--no-mesh",
+        action="store_true",
+        help="keep the trace layer but skip RL104's lower-and-compile pass",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=DEFAULT_BASELINE,
+        help=f"baseline/ratchet manifest (default: {DEFAULT_BASELINE})",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline to the current finding counts (ratchet)",
+    )
+    ap.add_argument("--list-rules", action="store_true", help="print the rule catalog and exit")
+    ap.add_argument(
+        "--root",
+        default=str(ROOT),
+        help="repo root the paths/baseline/docs resolve against (for tests)",
+    )
+    args = ap.parse_args(argv)
+    root = Path(args.root).resolve()
+
+    sys.path.insert(0, str(ROOT / "src"))
+    if not args.no_trace:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count=8").strip()
+
+    from repro.analysis import RULES, BaselineError, run, write_baseline
+
+    if args.list_rules:
+        for code in sorted(RULES):
+            rule = RULES[code]
+            print(f"{code}  [{rule.layer}] {rule.name}: {rule.summary}")
+        return 0
+
+    baseline = str(root / args.baseline) if args.baseline else None
+    try:
+        report = run(
+            root,
+            args.paths,
+            trace=not args.no_trace,
+            mesh_checks=not args.no_mesh,
+            baseline_path=baseline,
+        )
+    except (FileNotFoundError, BaselineError) as e:
+        print(f"repro-lint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        try:
+            write_baseline(baseline, report.counts)
+        except BaselineError as e:
+            print(f"repro-lint: error: {e}", file=sys.stderr)
+            return 2
+        n = sum(report.counts.values())
+        print(f"wrote {args.baseline}: {n} budgeted finding(s)")
+        return 0
+
+    if args.json:
+        print(json.dumps(report.to_json(), indent=2))
+        return 0 if report.ok() else 1
+
+    for path, msg in report.parse_errors:
+        print(f"{path}:0:0: PARSE {msg}")
+    for v in report.violations:
+        print(v.format())
+    for note in report.notes:
+        print(f"note: {note}")
+    status = "clean" if report.ok() else f"{len(report.violations)} finding(s)"
+    print(
+        f"repro-lint: {status} over {report.files_checked} file(s) "
+        f"({report.baselined} baselined, {report.suppressed} suppressed)"
+    )
+    return 0 if report.ok() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
