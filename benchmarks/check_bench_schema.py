@@ -63,6 +63,14 @@ SCHEMAS: dict[str, tuple] = {
         "revalidated_frac", "reval_err", "within_tol", "bit_identical",
         "cache", "method", "note",
     ),
+    "ifp": (
+        "graph", "xi", "tol", "method", "ifp1_us", "ifp2_us",
+        "forward_push_us", "ita_us", "ifp1_iterations", "ifp2_iterations",
+        "forward_push_iterations", "ita_iterations", "ifp1_ops",
+        "ifp2_ops", "forward_push_ops", "ita_ops", "ops_ratio_ifp_vs_fp",
+        "ops_ratio_ifp_vs_ita", "err_ifp1", "err_ifp2",
+        "variants_iteration_match", "oracle_ok", "note",
+    ),
     "serving": (
         "graph", "batch", "queries", "queue_cap", "zipf", "k", "xi",
         "t_batch_ms", "capacity_qps", "deadline_batches", "deadline_ms",
@@ -85,6 +93,9 @@ _TYPES = {
     "measured_reason_ok": bool, "declared_provenance": bool,
     "measured_provenance": bool, "cost_units_stable": bool,
     "loads": list, "queue_cap": int,
+    "variants_iteration_match": bool, "oracle_ok": bool,
+    "ifp1_iterations": int, "ifp2_iterations": int,
+    "forward_push_iterations": int, "ita_iterations": int,
     "p99_bounded_at_sat": bool, "clean_below_saturation": bool,
     "overload_protected": bool,
 }
@@ -135,6 +146,18 @@ DRIFT: dict[str, dict] = {
         equal=("bench", "bit_identical", "within_tol", "method"),
         ratio={"speedup_p50": 6.0},
         absolute={"hit_rate": 0.2, "revalidated_frac": 0.3},
+    ),
+    "ifp": dict(
+        # iteration and op counts are deterministic for a fixed graph
+        # shape (IFP's round count is ceil(log xi / log c), independent
+        # of hardware), so they must match exactly; only wall times vary
+        # and those are deliberately untracked here.
+        equal=("bench", "method", "oracle_ok", "variants_iteration_match",
+               "ifp1_iterations", "ifp2_iterations",
+               "forward_push_iterations", "ita_iterations"),
+        ratio={"ifp1_ops": 1.01, "ifp2_ops": 1.01,
+               "forward_push_ops": 1.01, "ops_ratio_ifp_vs_fp": 1.01},
+        absolute={},
     ),
     "serving": dict(
         # the sweep runs on a virtual clock with modeled batch cost, and

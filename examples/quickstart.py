@@ -30,7 +30,8 @@ def main():
     print("engine:", engine.describe())
 
     # 2. query: each solver takes its typed config (the old
-    #    solve_pagerank(g, method=..., **kwargs) funnel is deprecated).
+    #    solve_pagerank(g, method=..., **kwargs) funnel is removed —
+    #    API.md §Deprecations).
     results = {}
     for cfg in (
         PowerConfig(tol=1e-12),

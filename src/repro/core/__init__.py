@@ -5,7 +5,6 @@ from .api import (
     available_step_impls,
     make_config,
     reference_pagerank,
-    solve_pagerank,
     solve_pagerank_batch,
 )
 from .backends import (
@@ -28,6 +27,7 @@ from .cache import CachePolicy, ResultCache
 from .dynamic import ita_incremental, ita_prioritized, ita_residual_state
 from .engine import EnginePlan, PageRankEngine, TopKResult
 from .forward_push import forward_push
+from .ifp import ifp
 from .ita import ita, ita_fixed_point, ita_step, ita_traced
 from .metrics import SolverResult, err_max_rel, res_l2
 from .monte_carlo import monte_carlo
@@ -46,6 +46,7 @@ from .query import (
 from .solver_config import (
     BatchConfig,
     ForwardPushConfig,
+    IfpConfig,
     ItaConfig,
     MonteCarloConfig,
     PowerConfig,
@@ -55,17 +56,18 @@ from .solver_config import (
 __all__ = [
     "BackendCapabilities", "BatchConfig", "BatchQuery", "BatchSolverResult",
     "CachePolicy", "DeltaQuery", "EnginePlan", "ExecutionPlan",
-    "ForwardPushConfig", "ItaConfig", "MonteCarloConfig", "PPRQuery",
+    "ForwardPushConfig", "IfpConfig", "ItaConfig", "MonteCarloConfig",
+    "PPRQuery",
     "PageRankEngine", "PowerConfig", "Query", "RankQuery", "ResultCache",
     "ResultEnvelope", "SOLVERS",
     "STEP_IMPLS", "Solver", "SolverBackend", "SolverConfig", "SolverResult",
     "StepBackend", "TopKQuery", "TopKResult", "available_step_impls",
     "choose_backend", "dangling_mass", "err_max_rel", "forward_push",
-    "get_step_impl", "ita", "ita_batch", "ita_fixed_point",
+    "get_step_impl", "ifp", "ita", "ita_batch", "ita_fixed_point",
     "ita_incremental", "ita_prioritized", "ita_residual_state", "ita_step",
     "ita_traced", "make_config", "monte_carlo", "one_hot_personalizations",
     "power_method", "power_method_batch", "power_method_traced",
     "power_step", "push_weighted", "reference_pagerank",
-    "register_step_impl", "res_l2", "resolve_step_impl", "solve_pagerank",
+    "register_step_impl", "res_l2", "resolve_step_impl",
     "solve_pagerank_batch", "spmv_p",
 ]

@@ -3,32 +3,28 @@
 The registry speaks one typed protocol: every entry is a :class:`Solver`
 called as ``SOLVERS[name](g, cfg)`` where ``cfg`` is the method's config
 dataclass from ``core/solver_config.py`` (``ItaConfig``, ``PowerConfig``,
-``ForwardPushConfig``, ``MonteCarloConfig``).  Sessions that hold prepared
-per-graph state pass it via ``step_impl=``/``ctx=`` — that is how
-:class:`repro.core.engine.PageRankEngine` reuses its prepare phase without
-the solvers knowing about engines.
-
-``solve_pagerank(g, method=..., **kwargs)`` survives as a *deprecation
-shim*: it builds the typed config with ``make_config`` and a throwaway
-engine, then routes through the query plane (``engine.run(RankQuery)``,
-see ``core/query.py`` and docs/API.md), so existing callers keep working
-while new code writes
+``ForwardPushConfig``, ``IfpConfig``, ``MonteCarloConfig``).  Sessions
+that hold prepared per-graph state pass it via ``step_impl=``/``ctx=`` —
+that is how :class:`repro.core.engine.PageRankEngine` reuses its prepare
+phase without the solvers knowing about engines.  One-shot callers write
 
     engine = PageRankEngine(g)
     engine.run(RankQuery(ItaConfig(xi=1e-12)))   # or engine.solve(...)
 
-Removal timeline: the shim warns since PR 2 and is scheduled for removal
-two PRs after the query plane lands (see docs/API.md §Deprecations) —
-migrate to ``PageRankEngine`` now.
+(the old ``solve_pagerank(g, method, **kwargs)`` funnel went through its
+scheduled deprecation cycle and is gone — see docs/API.md §Deprecations;
+``make_config(method, **kwargs)`` remains the kwargs→config bridge).
 
 ``solve_pagerank_batch`` (core/batch.py, re-exported here) solves a whole
 [B, n] personalization batch in one device pass; the engine's
 ``solve_batch``/``topk`` are the session forms of the same operation.
+
+The per-solver catalog — recurrence, convergence condition, planner rule
+and capability row for every entry here — is docs/SOLVERS.md.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -37,12 +33,14 @@ from ..graph.structure import Graph
 from .backends import available_step_impls
 from .batch import solve_pagerank_batch  # noqa: F401  (public re-export)
 from .forward_push import forward_push
+from .ifp import ifp
 from .ita import ita, ita_traced
 from .metrics import SolverResult
 from .monte_carlo import monte_carlo
 from .power import power_method, power_method_traced
 from .solver_config import (
     ForwardPushConfig,
+    IfpConfig,
     ItaConfig,
     MonteCarloConfig,
     PowerConfig,
@@ -51,7 +49,7 @@ from .solver_config import (
     make_config,
 )
 
-__all__ = ["Solver", "solve_pagerank", "solve_pagerank_batch", "SOLVERS",
+__all__ = ["Solver", "solve_pagerank_batch", "SOLVERS",
            "available_step_impls", "make_config", "reference_pagerank"]
 
 
@@ -88,35 +86,11 @@ SOLVERS: dict[str, Solver] = {
     "ita": Solver("ita", ita, ItaConfig),
     "power": Solver("power", power_method, PowerConfig),
     "forward_push": Solver("forward_push", forward_push, ForwardPushConfig),
+    "ifp": Solver("ifp", ifp, IfpConfig),
     "monte_carlo": Solver("monte_carlo", monte_carlo, MonteCarloConfig),
     "ita_traced": Solver("ita_traced", ita_traced, ItaConfig),
     "power_traced": Solver("power_traced", power_method_traced, PowerConfig),
 }
-
-
-def solve_pagerank(g: Graph, method: str = "ita", **kwargs) -> SolverResult:
-    """Deprecated one-shot entry point (build an engine per call).
-
-    Prefer ``PageRankEngine(g).run(RankQuery(cfg))`` (or the ``solve``
-    wrapper) — it pays the prepare phase (vertex classification, ELL
-    bucketing, backend ctx) once per graph instead of once per call.
-    Scheduled for removal two PRs after the query plane (docs/API.md).
-    """
-    from .engine import EnginePlan, PageRankEngine
-    from .query import RankQuery
-
-    if method not in SOLVERS:
-        raise KeyError(f"unknown solver {method!r}; available: {sorted(SOLVERS)}")
-    warnings.warn(
-        "solve_pagerank() re-derives per-graph state on every call; "
-        "use repro.core.engine.PageRankEngine for repeated queries "
-        "(removal scheduled — see docs/API.md)",
-        DeprecationWarning, stacklevel=2)
-    cfg = make_config(method, **kwargs)
-    plan = EnginePlan(step_impl=getattr(cfg, "step_impl", None) or "dense",
-                      dtype=getattr(cfg, "dtype", jnp.float64))
-    engine = PageRankEngine(g, plan=plan)
-    return engine.run(RankQuery(cfg=cfg, method=method)).result
 
 
 def reference_pagerank(g: Graph, *, c: float = 0.85,

@@ -196,6 +196,7 @@ class PageRankEngine:
                            else ("batch_parallel_mesh",))
             self.step_impl, self._backend_reason = choose_backend(
                 dict(n=g.n, m=g.m, mesh=self._mesh_shape,
+                     undirected=g.is_undirected,
                      dtype=np.dtype(plan.dtype).name), require=require)
         else:
             self.step_impl = resolve_step_impl(plan.step_impl)
@@ -246,7 +247,8 @@ class PageRankEngine:
             # cached conversions stay valid) — transplant them so the
             # prepare-time warming above actually serves the queries.
             for attr in ("_ell_cache", "_ell_part_cache",
-                         "_part_cols_cache", "_graph_version"):
+                         "_part_cols_cache", "_undirected_cache",
+                         "_graph_version"):
                 cache = getattr(g, attr, None)
                 if cache is not None:
                     object.__setattr__(self.graph, attr, cache)
@@ -296,6 +298,7 @@ class PageRankEngine:
             has_residual_state=self._state is not None,
             graph_version=self.graph_version,
             cache=self.cache_policy,
+            undirected=self.graph.is_undirected,
         )
 
     def plan(self, query: Query) -> ExecutionPlan:

@@ -1,0 +1,211 @@
+"""IFP — improved forward push (arXiv 2302.03245) over pluggable backends.
+
+The IFP family starts from the observation that forward push's per-vertex
+active-set bookkeeping (the ``r_i > xi`` queue) is what blocks its
+parallelisation: each round's work list depends on the previous round's
+pushes.  IFP drops the threshold entirely — every round is one *full*
+residual sweep over P' (dangling vertices re-linked analytically to the
+personalization, ``P' = P + d p^T``; see :func:`ifp_round`) — which turns
+the round into the registry's push op and lets any
+:class:`~repro.core.backends.SolverBackend` drive it.
+
+Two variants, selected by ``variant=``:
+
+``"ifp1"`` — residual form.  Maintain the (pi, r) pair::
+
+    pi_{t+1} = pi_t + (1-c) r_t
+    r_{t+1}  = c P'^T r_t
+
+  Stop when ``||r||_1 <= xi``; exit-fold ``pi += r``.  P' is
+  column-stochastic, so ``||r_t||_1 == c^t`` *exactly* — the stopping
+  rule is deterministic in t and the fold conserves ``sum(pi) == 1`` to
+  machine precision (the tail's mass is exactly ``||r_T||_1``).
+
+``"ifp2"`` — fused iterate.  Maintain (x, delta) with
+``x_{t+1} = (1-c) p + c P'^T x_t`` via its telescoped form
+``delta_{t+1} = c P'^T delta_t``, ``x += delta``.  The delta stream is
+IFP1's residual stream scaled by (1-c), so the loop stops when
+``||delta||_1 <= (1-c) xi`` (the same round count as IFP1 for the same
+``xi``) and folds the geometric tail ``x += delta * c/(1-c)`` — again
+mass-exact.  Same per-round operation count as IFP1; the variants differ
+in which pair of vectors the loop carries, which is the paper's point:
+IFP2 never materialises a separate accumulator update.
+
+Both run the jitted device-resident ``while_loop`` for jittable backends
+and an identical-semantics python loop for host-driven ones (frontier
+family) — the ``run_ita_loop`` dispatch, applied to the IFP round.
+``ctx=`` threads a :class:`~repro.core.engine.PageRankEngine` session's
+prepared backend context, so engine queries reuse the prepare-once state.
+No final normalization: like ``forward_push``, the fold *is* the answer.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.structure import Graph
+from .backends import StepBackend, get_step_impl
+from .metrics import SolverResult
+
+__all__ = ["ifp", "ifp_round"]
+
+
+def ifp_round(
+    backend: StepBackend,
+    g: Graph,
+    ctx,
+    r: jnp.ndarray,
+    c: float,
+    inv_deg: jnp.ndarray,
+    dangling: jnp.ndarray,
+    p: jnp.ndarray,
+) -> jnp.ndarray:
+    """One full IFP sweep: ``c P'^T r`` over any registered backend.
+
+    P' re-links every dangling vertex to the personalization ``p``
+    (``P' = P + d p^T``, the strongly-preferential convention the power
+    method's rank-1 dangling correction implements) — realised as the
+    analytic rank-1 update ``c * dangling_mass * p`` instead of
+    materialised edges.  With the default uniform ``p = e/n`` this is
+    the familiar ``c * dangling_mass / n`` broadcast of
+    :func:`~repro.core.forward_push.forward_push_step`; making it follow
+    ``p`` keeps IFP equal to ``power_method(g, p=p)`` and the normalized
+    Neumann oracle for *every* personalization, not just the uniform one.
+    """
+    dm = jnp.sum(jnp.where(dangling, r, 0))
+    pushed = backend.push(g, ctx, r * inv_deg * c)
+    return pushed + c * dm * p
+
+
+# NOTE: the backend INSTANCE is the static jit key (not its registry name),
+# matching _ita_loop_jit — re-registering under a name must invalidate
+# cached traces.
+@partial(jax.jit, static_argnames=("max_iter", "backend"))
+def _ifp1_loop(
+    g: Graph, ctx, r0: jnp.ndarray, c: float, xi: float, max_iter: int, backend: StepBackend
+):
+    inv_deg = g.inv_out_deg(r0.dtype)
+    dangling = g.dangling_mask
+
+    def cond(state):
+        _, r, it = state
+        return jnp.logical_and(jnp.sum(jnp.abs(r)) > xi, it < max_iter)
+
+    def body(state):
+        pi, r, it = state
+        pi = pi + (1.0 - c) * r
+        r = ifp_round(backend, g, ctx, r, c, inv_deg, dangling, r0)
+        return pi, r, it + 1
+
+    init = (jnp.zeros_like(r0), r0, jnp.asarray(0, jnp.int32))
+    pi, r, it = jax.lax.while_loop(cond, body, init)
+    res = jnp.sum(jnp.abs(r))
+    return pi + r, res, it  # fold the tail's exact mass
+
+
+@partial(jax.jit, static_argnames=("max_iter", "backend"))
+def _ifp2_loop(
+    g: Graph, ctx, r0: jnp.ndarray, c: float, xi: float, max_iter: int, backend: StepBackend
+):
+    inv_deg = g.inv_out_deg(r0.dtype)
+    dangling = g.dangling_mask
+    tol = (1.0 - c) * xi  # delta stream = (1-c) x IFP1's residual stream
+
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(jnp.sum(jnp.abs(delta)) > tol, it < max_iter)
+
+    def body(state):
+        x, delta, it = state
+        delta = ifp_round(backend, g, ctx, delta, c, inv_deg, dangling, r0)
+        return x + delta, delta, it + 1
+
+    x0 = (1.0 - c) * r0
+    x, delta, it = jax.lax.while_loop(cond, body, (x0, x0, jnp.asarray(0, jnp.int32)))
+    res = jnp.sum(jnp.abs(delta))
+    return x + delta * (c / (1.0 - c)), res, it  # geometric tail fold
+
+
+def _ifp_host_loop(
+    g: Graph,
+    ctx,
+    r0: jnp.ndarray,
+    c: float,
+    xi: float,
+    max_iter: int,
+    backend: StepBackend,
+    variant: str,
+):
+    """Python-driven twin of the jitted loops (host-driven backends)."""
+    inv_deg = g.inv_out_deg(r0.dtype)
+    dangling = g.dangling_mask
+    if variant == "ifp1":
+        pi, r, it = jnp.zeros_like(r0), r0, 0
+        while it < max_iter and float(jnp.sum(jnp.abs(r))) > xi:
+            pi = pi + (1.0 - c) * r
+            r = ifp_round(backend, g, ctx, r, c, inv_deg, dangling, r0)
+            it += 1
+        res = jnp.sum(jnp.abs(r))
+        return pi + r, res, jnp.asarray(it, jnp.int32)
+    x = (1.0 - c) * r0
+    delta, it, tol = x, 0, (1.0 - c) * xi
+    while it < max_iter and float(jnp.sum(jnp.abs(delta))) > tol:
+        delta = ifp_round(backend, g, ctx, delta, c, inv_deg, dangling, r0)
+        x = x + delta
+        it += 1
+    res = jnp.sum(jnp.abs(delta))
+    return x + delta * (c / (1.0 - c)), res, jnp.asarray(it, jnp.int32)
+
+
+def ifp(
+    g: Graph,
+    *,
+    c: float = 0.85,
+    xi: float = 1e-12,
+    p: Optional[jnp.ndarray] = None,
+    max_iter: int = 10_000,
+    dtype=jnp.float64,
+    variant: str = "ifp1",
+    step_impl: str = "dense",
+    ctx=None,
+) -> SolverResult:
+    """Improved forward push (IFP1/IFP2, arXiv 2302.03245).
+
+    ``step_impl`` names the push backend for the full sweep; ``ctx`` is
+    an already-prepared per-graph context for that backend (the engine's
+    prepare-once state) — built on the fly when ``None``.
+    """
+    if variant not in ("ifp1", "ifp2"):
+        raise ValueError(f"unknown IFP variant {variant!r}; available: ['ifp1', 'ifp2']")
+    backend = get_step_impl(step_impl)
+    if ctx is None:
+        ctx = backend.prepare(g)
+    r0 = jnp.full((g.n,), 1.0 / g.n, dtype=dtype) if p is None else p.astype(dtype)
+    t0 = time.perf_counter()
+    if backend.capabilities().jittable:
+        loop = _ifp1_loop if variant == "ifp1" else _ifp2_loop
+        pi, res, it = loop(g, ctx, r0, float(c), float(xi), int(max_iter), backend)
+    else:
+        pi, res, it = _ifp_host_loop(
+            g, ctx, r0, float(c), float(xi), int(max_iter), backend, variant
+        )
+    pi = jax.block_until_ready(pi)
+    wall = time.perf_counter() - t0
+    # every round is one full P' sweep; a dangling vertex's P' degree is n.
+    deg_p = jnp.where(g.dangling_mask, g.n, g.out_deg).astype(jnp.float64)
+    ops_round = float(jax.device_get(jnp.sum(deg_p)))
+    tol = float(xi) if variant == "ifp1" else (1.0 - float(c)) * float(xi)
+    return SolverResult(
+        pi=pi,
+        iterations=int(it),
+        residual=float(res),
+        ops=ops_round * int(it),
+        converged=bool(float(res) <= tol),
+        method="ifp",
+        wall_time_s=wall,
+    )

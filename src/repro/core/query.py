@@ -264,6 +264,7 @@ class PlannerState:
     has_residual_state: bool
     graph_version: int = 0          # monotone edge-set version (deltas bump)
     cache: Any = None               # CachePolicy when a result cache is on
+    undirected: bool = False        # Graph.is_undirected (symmetric edges)
 
 
 def _price(backend_name: str, stats: dict, cfg, batch: int = 1) -> dict:
@@ -339,7 +340,12 @@ def _plan_rank(state: PlannerState, q: RankQuery) -> ExecutionPlan:
     reasons = [f"engine prepared step_impl={state.step_impl!r} "
                f"({state.backend_reason})",
                f"capabilities: {caps.summary()}"]
-    stats = dict(n=state.n, m=state.m,
+    if state.undirected:
+        reasons.append(
+            "graph is undirected (Graph.is_undirected): the "
+            "undirected-schedule rule discounts priority diffusion "
+            "(frontier_priority) in host-eligible backend pools")
+    stats = dict(n=state.n, m=state.m, undirected=state.undirected,
                  dtype=np.dtype(getattr(cfg, "dtype", state.dtype)).name)
     if "step_impl" not in accepted_params(SOLVERS[method].fn):
         # solver consumes no push backend — runs as-is
@@ -374,7 +380,7 @@ def _plan_batch_common(state: PlannerState, cfg, B: int, kind: str
     reasons = [f"engine prepared step_impl={state.step_impl!r} "
                f"({state.backend_reason})",
                f"capabilities: {caps.summary()}"]
-    stats = dict(n=state.n, m=state.m,
+    stats = dict(n=state.n, m=state.m, undirected=state.undirected,
                  dtype=np.dtype(getattr(cfg, "dtype", state.dtype)).name)
     price = _price(state.step_impl, stats, cfg, batch=B)
     mesh = None

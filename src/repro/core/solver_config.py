@@ -21,8 +21,8 @@ non-``None`` value is an explicit request and the engine refuses a config
 that contradicts its prepared layout rather than silently re-bucketing.
 
 ``make_config(method, **kwargs)`` builds the right config for a registry
-method name — the bridge the deprecated ``solve_pagerank(g, method, **kw)``
-shim uses.  ``SolverConfig.kwargs_for(fn)`` projects a config onto an
+method name from keyword arguments (CLIs, serving configs).
+``SolverConfig.kwargs_for(fn)`` projects a config onto an
 arbitrary solver signature so one config class can serve both the plain and
 traced variants of a solver (``ita`` / ``ita_traced``) without carrying
 fields the plain variant would reject.
@@ -38,8 +38,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "SolverConfig", "ItaConfig", "PowerConfig", "ForwardPushConfig",
-    "MonteCarloConfig", "BatchConfig", "CONFIGS", "make_config",
-    "config_for", "accepted_params",
+    "IfpConfig", "MonteCarloConfig", "BatchConfig", "CONFIGS",
+    "make_config", "config_for", "accepted_params",
 ]
 
 
@@ -127,6 +127,31 @@ class ForwardPushConfig(SolverConfig):
 
 
 @dataclasses.dataclass(frozen=True)
+class IfpConfig(SolverConfig):
+    """Improved forward push over P' (IFP1/IFP2, arXiv 2302.03245).
+
+    ``variant`` selects the loop form: ``"ifp1"`` carries the (pi, r)
+    residual pair, ``"ifp2"`` the fused (x, delta) iterate — same round
+    count and operation count for the same ``xi`` (see ``core/ifp.py``).
+    Unlike ``forward_push`` the sweep is thresholdless, so it consumes a
+    push backend: ``step_impl`` follows the usual contract (``None`` =
+    no opinion, engine's prepared backend inside a session).
+    """
+
+    xi: float = 1e-12
+    max_iter: int = 10_000
+    variant: str = "ifp1"
+    step_impl: Optional[str] = None
+
+    method: ClassVar[str] = "ifp"
+
+    def __post_init__(self):
+        if self.variant not in ("ifp1", "ifp2"):
+            raise ValueError(f"unknown IFP variant {self.variant!r}; "
+                             f"available: ['ifp1', 'ifp2']")
+
+
+@dataclasses.dataclass(frozen=True)
 class MonteCarloConfig(SolverConfig):
     """MC complete-path estimator (Avrachenkov et al.)."""
 
@@ -207,6 +232,7 @@ CONFIGS: dict[str, type] = {
     "power": PowerConfig,
     "power_traced": PowerConfig,
     "forward_push": ForwardPushConfig,
+    "ifp": IfpConfig,
     "monte_carlo": MonteCarloConfig,
     "batch": BatchConfig,
 }

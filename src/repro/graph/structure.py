@@ -74,6 +74,31 @@ class Graph:
         return self.m / max(self.n, 1)
 
     @property
+    def is_undirected(self) -> bool:
+        """True iff the edge set is symmetric (every (u, v) has its (v, u)).
+
+        The detectable structural property the planner exploits (see
+        ``choose_backend``): on a symmetric edge set the priority-ordered
+        diffusion schedule ("frontier_priority") declares a cost discount,
+        because descending-residual sweeps drain mass along both edge
+        directions at once instead of round-tripping it.  Host-side O(m)
+        check, cached outside the pytree like the layout caches — the
+        engine transplants the cache across ``device_put`` copies of the
+        same edge set, and :func:`apply_edge_delta` returns a fresh graph
+        so a delta always recomputes.  Empty graphs are trivially
+        symmetric; self-loops are their own reverse.
+        """
+        cached = getattr(self, "_undirected_cache", None)
+        if cached is None:
+            src = np.asarray(self.src, dtype=np.int64)
+            dst = np.asarray(self.dst, dtype=np.int64)
+            fwd = dst * np.int64(self.n) + src  # sorted-unique by invariant
+            rev = np.sort(src * np.int64(self.n) + dst)
+            cached = bool(np.array_equal(fwd, rev))
+            object.__setattr__(self, "_undirected_cache", cached)
+        return cached
+
+    @property
     def graph_version(self) -> int:
         """Monotone edge-set version, bumped by :func:`apply_edge_delta`.
 

@@ -25,10 +25,11 @@ def main(argv=None) -> int:
                     help="Table-3 preset name (stat-matched synthetic)")
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--method", default="ita",
-                    choices=["ita", "power", "forward_push", "monte_carlo"])
+                    choices=["ita", "power", "forward_push", "ifp",
+                             "monte_carlo"])
     ap.add_argument("--step-impl", default="dense",
-                    help="push backend: auto | dense | frontier | ell "
-                         "(core/backends.py registry)")
+                    help="push backend: auto | dense | frontier | "
+                         "frontier_priority | ell (core/backends.py registry)")
     ap.add_argument("--batch", type=int, default=0,
                     help="if > 0, solve this many one-hot PPR queries in "
                          "one batched pass instead of one global ranking")
@@ -38,6 +39,10 @@ def main(argv=None) -> int:
     ap.add_argument("--explain", action="store_true",
                     help="print the ExecutionPlan for the requested query "
                          "(backend, mesh, path, why) and exit")
+    ap.add_argument("--symmetrize", action="store_true",
+                    help="mirror every edge before solving (makes the "
+                         "graph undirected, so --explain shows the "
+                         "undirected-schedule planner rule)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -58,6 +63,13 @@ def main(argv=None) -> int:
                  "solvers run outside the engine planner")
 
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
+    if args.symmetrize:
+        import numpy as np
+
+        from ..graph import graph_from_edges
+        src, dst = np.asarray(g.src), np.asarray(g.dst)
+        g = graph_from_edges(np.concatenate([src, dst]),
+                             np.concatenate([dst, src]), g.n)
     print(f"graph: {g.stats()}")
 
     if args.partition != "none":
@@ -93,7 +105,7 @@ def main(argv=None) -> int:
             batch_method=args.method, c=args.c, xi=args.xi, tol=args.xi))
     else:
         kwargs = {"c": args.c}
-        if args.method in ("ita", "forward_push"):
+        if args.method in ("ita", "forward_push", "ifp"):
             kwargs["xi"] = args.xi
         elif args.method == "power":
             kwargs["tol"] = args.xi

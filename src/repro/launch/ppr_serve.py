@@ -22,6 +22,10 @@ shape that actually exercises shedding and degradation.
   * ``degrade``  — adds the hysteretic fidelity ladder (looser ξ);
   * ``full``     — both.
 
+The solver itself comes from the engine's serving config — any
+registered ``SOLVERS`` entry, including ``"ifp"`` (docs/SOLVERS.md §ifp),
+is selectable there; this CLI does not hard-code a method.
+
 ``--sim`` replays the identical loop on a virtual clock with modeled
 batch cost (calibrated from one real warmup batch) — deterministic
 queueing dynamics, no wall-clock dependence; the mode every serving

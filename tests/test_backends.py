@@ -15,6 +15,7 @@ import pytest
 from repro.core import (
     available_step_impls,
     get_step_impl,
+    ifp,
     ita,
     ita_batch,
     ita_fixed_point,
@@ -50,7 +51,8 @@ GRAPHS = {
 
 class TestRegistry:
     def test_expected_backends_registered(self):
-        assert {"dense", "frontier", "ell"} <= set(STEP_IMPLS)
+        assert {"dense", "frontier", "frontier_priority", "ell"} <= set(
+            STEP_IMPLS)
 
     def test_unknown_impl_raises(self):
         with pytest.raises(KeyError):
@@ -165,6 +167,140 @@ class TestEquivalenceAcrossBackends:
         r_traced = ita_traced(g, xi=1e-12, step_impl=impl)
         np.testing.assert_allclose(r_traced.pi, r_fast.pi, atol=1e-13)
         assert r_traced.active_history[-1] <= r_traced.active_history[0]
+
+
+class TestIfpAcrossBackends:
+    """IFP (arXiv 2302.03245) == Neumann oracle on every step backend."""
+
+    @pytest.mark.parametrize("impl", ALL_IMPLS)
+    @pytest.mark.parametrize("variant", ["ifp1", "ifp2"])
+    def test_ifp_matches_oracle(self, impl, variant):
+        g = GRAPHS["web"]()
+        pi_oracle = ita_fixed_point(g, n_terms=300)
+        r = ifp(g, xi=1e-14, variant=variant, step_impl=impl)
+        assert r.converged
+        np.testing.assert_allclose(r.pi, pi_oracle, atol=1e-11)
+
+    @pytest.mark.parametrize("variant", ["ifp1", "ifp2"])
+    def test_ifp_special_vertices(self, variant):
+        g = GRAPHS["special"]()
+        pi_ref = power_method(g, tol=1e-14, max_iter=500).pi
+        np.testing.assert_allclose(ifp(g, xi=1e-14, variant=variant).pi,
+                                   pi_ref, atol=1e-11)
+
+    def test_ifp_variants_take_identical_rounds(self):
+        """IFP2's scaled tolerance makes both variants stop after exactly
+        ceil(log xi / log c) full sweeps — same round count, same answer."""
+        g = GRAPHS["web"]()
+        r1 = ifp(g, xi=1e-12, variant="ifp1")
+        r2 = ifp(g, xi=1e-12, variant="ifp2")
+        assert r1.iterations == r2.iterations
+        np.testing.assert_allclose(r2.pi, r1.pi, atol=1e-13)
+
+    def test_ifp_personalized(self):
+        g = GRAPHS["web"]()
+        p = np.zeros(g.n)
+        p[:5] = 0.2
+        p = jnp.asarray(p)
+        pi_ref = power_method(g, p=p, tol=1e-14, max_iter=500).pi
+        np.testing.assert_allclose(ifp(g, p=p, xi=1e-15).pi, pi_ref,
+                                   atol=1e-11)
+
+    def test_ifp_mass_exact(self):
+        """The exit folds are mass-exact: sum(pi) == 1 to machine eps."""
+        g = GRAPHS["unref"]()
+        for variant in ("ifp1", "ifp2"):
+            pi = ifp(g, xi=1e-8, variant=variant).pi  # loose xi: fold matters
+            assert abs(float(jnp.sum(pi)) - 1.0) < 1e-12
+
+    def test_ifp_bad_variant(self):
+        with pytest.raises(ValueError):
+            ifp(GRAPHS["special"](), variant="ifp3")
+
+
+class TestPrioritySchedule:
+    """D-Iteration priority order is a pure reordering: the commutative
+    segment-sum computes the same push (to summation-order rounding);
+    the schedule's planner value rides in its declared cost."""
+
+    def test_priority_push_matches_fifo(self):
+        g = web_graph(300, 2400, dangling_frac=0.2, seed=50)
+        fifo, prio = get_step_impl("frontier"), get_step_impl("frontier_priority")
+        w = jnp.asarray(np.random.default_rng(2).random(g.n))
+        y_fifo = fifo.push(g, fifo.prepare(g), w)
+        y_prio = prio.push(g, prio.prepare(g), w)
+        np.testing.assert_allclose(y_prio, y_fifo, atol=1e-12)
+
+    def test_priority_emission_order_is_descending(self):
+        """The reordering actually happens: the host emits the frontier
+        largest-|w|-first (stable, so ties keep vertex order)."""
+        g = web_graph(300, 2400, dangling_frac=0.2, seed=50)
+        prio = get_step_impl("frontier_priority")
+        w_host = np.asarray(np.random.default_rng(2).random(g.n))
+        vs = np.nonzero(w_host)[0]
+        vs_sorted = vs[np.argsort(-np.abs(w_host[vs]), kind="stable")]
+        assert (np.diff(np.abs(w_host[vs_sorted])) <= 0).all()
+        assert set(vs_sorted) == set(vs)
+
+    def test_priority_cost_discount_needs_undirected(self):
+        prio = get_step_impl("frontier_priority")
+        fifo = get_step_impl("frontier")
+        stats = dict(n=10_000, m=80_000)
+        assert prio.cost(stats) == pytest.approx(fifo.cost(stats))
+        assert prio.cost(dict(stats, undirected=True)) == pytest.approx(
+            fifo.cost(stats) * prio.undirected_cost_factor)
+
+
+class TestIsUndirected:
+    def test_detects_symmetry(self):
+        g = web_graph(200, 1500, dangling_frac=0.1, seed=60)
+        assert not g.is_undirected  # random directed web
+        src, dst = np.asarray(g.src), np.asarray(g.dst)
+        g_sym = graph_from_edges(np.concatenate([src, dst]),
+                                 np.concatenate([dst, src]), g.n)
+        assert g_sym.is_undirected
+
+    def test_self_loops_and_empty(self):
+        src = np.array([0, 1, 2])
+        dst = np.array([1, 0, 2])  # mutual pair + self-loop
+        assert graph_from_edges(src, dst, 3).is_undirected
+        empty = graph_from_edges(np.array([], dtype=np.int64),
+                                 np.array([], dtype=np.int64), 4)
+        assert empty.is_undirected
+
+    def test_cached_on_instance(self):
+        g = web_graph(100, 700, seed=61)
+        assert not hasattr(g, "_undirected_cache")
+        val = g.is_undirected
+        assert g._undirected_cache is val  # populated once, reused
+
+    def test_apply_edge_delta_recomputes(self):
+        from repro.graph import apply_edge_delta
+
+        src = np.array([0, 1])
+        dst = np.array([1, 0])
+        g = graph_from_edges(src, dst, 3)
+        assert g.is_undirected
+        g2 = apply_edge_delta(g, add=[(1, 2)])
+        # fresh Graph: no transplanted cache, property re-evaluates
+        assert not hasattr(g2, "_undirected_cache")
+        assert not g2.is_undirected
+        assert g.is_undirected  # original untouched
+
+    def test_engine_transplants_cache_across_device_put(self):
+        from repro.core import EnginePlan, PageRankEngine
+
+        g = web_graph(80, 500, dangling_frac=0.1, seed=62)
+        src, dst = np.asarray(g.src), np.asarray(g.dst)
+        g_sym = graph_from_edges(np.concatenate([src, dst]),
+                                 np.concatenate([dst, src]), g.n)
+        assert g_sym.is_undirected  # warm the cache pre-prepare
+        eng = PageRankEngine(g_sym, EnginePlan(mesh=(1, 1)))
+        # device_put built a NEW Graph pytree; the engine must transplant
+        # the host-side cache rather than silently dropping it
+        assert eng.graph is not g_sym
+        assert getattr(eng.graph, "_undirected_cache", None) is True
+        assert eng.graph.is_undirected
 
 
 class TestDynamicAcrossBackends:

@@ -24,7 +24,6 @@ from repro.core import (
     make_config,
     power_method,
     reference_pagerank,
-    solve_pagerank,
     solve_pagerank_batch,
 )
 from repro.core.backends import STEP_IMPLS
@@ -92,15 +91,15 @@ class TestParity:
         r = eng.solve(ItaConfig(xi=1e-10), method="ita_traced")
         assert r.res_history is not None and len(r.res_history) > 0
 
-    def test_shim_deprecated_but_identical(self, g):
-        with pytest.warns(DeprecationWarning):
-            r = solve_pagerank(g, method="ita", xi=1e-12)
-        r_leg = ita(g, xi=1e-12)
-        assert np.array_equal(np.asarray(r.pi), np.asarray(r_leg.pi))
+    def test_one_shot_funnel_removed(self):
+        # solve_pagerank(g, method, **kwargs) completed its scheduled
+        # deprecation cycle (docs/API.md §Deprecations): the engine and
+        # make_config are the supported spellings now.
+        import repro.core as core
+        import repro.core.api as api
 
-    def test_shim_unknown_method(self, g):
-        with pytest.raises(KeyError):
-            solve_pagerank(g, method="nope")
+        assert not hasattr(core, "solve_pagerank")
+        assert not hasattr(api, "solve_pagerank")
 
 
 # --------------------------------------------------------------------------

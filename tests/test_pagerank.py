@@ -11,15 +11,17 @@ from _propcheck import given, settings
 from _propcheck import strategies as st
 
 from repro.core import (
+    PageRankEngine,
     err_max_rel,
     forward_push,
+    ifp,
     ita,
     ita_fixed_point,
     ita_traced,
+    make_config,
     monte_carlo,
     power_method,
     reference_pagerank,
-    solve_pagerank,
 )
 from repro.graph import erdos_renyi, graph_from_edges, random_dag, web_graph
 
@@ -45,6 +47,12 @@ class TestEquivalence:
     def test_forward_push_equals_power(self):
         g = web_graph(800, 6000, dangling_frac=0.1, seed=4)
         np.testing.assert_allclose(forward_push(g, xi=1e-15).pi, _ref(g), atol=1e-10)
+
+    def test_ifp_equals_power(self):
+        g = web_graph(800, 6000, dangling_frac=0.1, seed=4)
+        for variant in ("ifp1", "ifp2"):
+            np.testing.assert_allclose(ifp(g, xi=1e-14, variant=variant).pi,
+                                       _ref(g), atol=1e-11)
 
     def test_monte_carlo_approximates(self):
         g = web_graph(300, 2500, dangling_frac=0.1, seed=5)
@@ -165,14 +173,15 @@ class TestSpecialVertexClaims:
 class TestAPI:
     def test_registry(self):
         g = erdos_renyi(100, 600, seed=0)
-        for m in ("ita", "power", "forward_push"):
-            r = solve_pagerank(g, method=m)
+        engine = PageRankEngine(g)
+        for m in ("ita", "power", "forward_push", "ifp"):
+            r = engine.solve(make_config(m))
             assert abs(float(jnp.sum(r.pi)) - 1) < 1e-8
 
     def test_unknown_method(self):
         g = erdos_renyi(10, 30, seed=0)
         with pytest.raises(KeyError):
-            solve_pagerank(g, method="nope")
+            PageRankEngine(g).solve(method="nope")
 
     def test_reference_pagerank(self):
         g = erdos_renyi(100, 600, seed=0)

@@ -2,8 +2,10 @@
 
 The backend decision table is committed as a golden file
 (tests/golden/planner_golden.json): every row is a (graph stats, mesh,
-platform, require) point with the backend ``choose_backend`` must pick and
-a substring its reason must contain.  Platform enters through the
+platform, require, candidate pool) point with the backend
+``choose_backend`` must pick and a substring its reason must contain —
+including the undirected-schedule rows, where the reason must name the
+rule (SOLVERS.md §frontier_priority).  Platform enters through the
 ``stats["platform"]`` override, so the TPU rows assert the production
 decision from the CPU CI container.  Regenerate after an intentional
 cost-model change with::
@@ -46,35 +48,65 @@ from repro.roofline.planner_costs import (
 GOLDEN_PATH = Path(__file__).parent / "golden" / "planner_golden.json"
 UPDATE = os.environ.get("REPRO_UPDATE_GOLDEN") == "1"
 
-# The committed decision table: (id, stats, require).  Adding a case here
-# and regenerating the golden extends coverage; editing a committed
-# expectation requires the regeneration flag, which makes cost-model
-# drift an explicit, reviewed act.
+# The committed decision table: (id, stats, require, opts).  ``opts`` may
+# carry ``jittable_only`` (default True — the engine's serving pool) and
+# ``reason_contains`` (default: the declared-cost tiebreak line).  Adding a
+# case here and regenerating the golden extends coverage; editing a
+# committed expectation requires the regeneration flag, which makes
+# cost-model drift an explicit, reviewed act.
+_DECLARED_REASON = "lowest est. cost among eligible backends"
 DECISION_CASES = [
-    ("cpu-small", dict(n=1_000, m=8_000, platform="cpu"), ()),
-    ("cpu-large", dict(n=1_000_000, m=30_000_000, platform="cpu"), ()),
-    ("tpu-small", dict(n=1_000, m=8_000, platform="tpu"), ()),
-    ("tpu-large", dict(n=1_000_000, m=30_000_000, platform="tpu"), ()),
+    ("cpu-small", dict(n=1_000, m=8_000, platform="cpu"), (), {}),
+    ("cpu-large", dict(n=1_000_000, m=30_000_000, platform="cpu"), (), {}),
+    ("tpu-small", dict(n=1_000, m=8_000, platform="tpu"), (), {}),
+    ("tpu-large", dict(n=1_000_000, m=30_000_000, platform="tpu"), (), {}),
     (
         "cpu-mesh-R1",
         dict(n=100_000, m=2_000_000, platform="cpu", mesh=(4, 1)),
         ("batch_parallel_mesh",),
+        {},
     ),
     (
         "cpu-mesh-C2",
         dict(n=100_000, m=2_000_000, platform="cpu", mesh=(4, 2)),
         ("batch_parallel_mesh", "vertex_sharded_mesh"),
+        {},
     ),
     (
         "tpu-mesh-C2",
         dict(n=100_000, m=2_000_000, platform="tpu", mesh=(4, 2)),
         ("batch_parallel_mesh", "vertex_sharded_mesh"),
+        {},
+    ),
+    # Undirected-schedule rule (SOLVERS.md §frontier_priority): on a
+    # symmetric edge set a host-eligible pool prefers priority diffusion
+    # via its declared undirected_cost_factor; the same stats without the
+    # flag — or restricted to the jittable pool — still pick dense.
+    (
+        "cpu-hostpool-undirected",
+        dict(n=50_000, m=400_000, platform="cpu", undirected=True),
+        (),
+        dict(jittable_only=False, reason_contains="undirected-schedule rule"),
+    ),
+    (
+        "cpu-hostpool-directed",
+        dict(n=50_000, m=400_000, platform="cpu"),
+        (),
+        dict(jittable_only=False),
+    ),
+    (
+        "cpu-jitpool-undirected",
+        dict(n=50_000, m=400_000, platform="cpu", undirected=True),
+        (),
+        {},
     ),
 ]
 
 
-def _decide(stats, require):
-    name, reason = choose_backend(dict(stats), require=tuple(require))
+def _decide(stats, require, opts):
+    name, reason = choose_backend(
+        dict(stats), require=tuple(require), jittable_only=opts.get("jittable_only", True)
+    )
     return name, reason
 
 
@@ -88,15 +120,16 @@ def test_golden_file_is_current():
     set_cost_table(CostTable())  # decisions below are the declared ones
     try:
         decisions = []
-        for case_id, stats, require in DECISION_CASES:
-            name, reason = _decide(stats, require)
+        for case_id, stats, require, opts in DECISION_CASES:
+            name, reason = _decide(stats, require, opts)
             decisions.append(
                 dict(
                     id=case_id,
                     stats={k: (list(v) if isinstance(v, tuple) else v) for k, v in stats.items()},
                     require=list(require),
+                    jittable_only=opts.get("jittable_only", True),
                     backend=name,
-                    reason_contains="lowest est. cost among eligible backends",
+                    reason_contains=opts.get("reason_contains", _DECLARED_REASON),
                 )
             )
     finally:
@@ -115,15 +148,15 @@ def test_golden_file_is_current():
 
 
 @pytest.mark.parametrize(
-    "case_id,stats,require",
+    "case_id,stats,require,opts",
     DECISION_CASES,
     ids=[c[0] for c in DECISION_CASES],
 )
-def test_golden_decision(case_id, stats, require):
+def test_golden_decision(case_id, stats, require, opts):
     golden = {d["id"]: d for d in _load_golden()["decisions"]}[case_id]
     set_cost_table(CostTable())
     try:
-        name, reason = _decide(stats, require)
+        name, reason = _decide(stats, require, opts)
     finally:
         set_cost_table(None)
     assert name == golden["backend"], reason
